@@ -1,0 +1,60 @@
+"""Paper Fig. 4(b) / §5.4: lazy vs static allocation batch-size growth.
+
+Runs the REAL host-side machinery (core/allocator.py + core/scheduler.py) on
+a LongBench-statistics request trace — not the analytic model — and measures
+the achieved average decode batch under (a) static max-context reservation
+(baseline PIM), (b) DPA lazy allocation, (c) the ideal upper bound. The
+paper reports up to 380% average-batch improvement, approaching ideal.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.allocator import PageAllocator
+from repro.core.scheduler import ContinuousBatcher, Request
+from repro.data.pipeline import LONGBENCH_STATS, request_trace
+
+PAGE = 256
+MAX_CTX = 32768
+
+
+def simulate(task: str, n_pages: int, *, static: bool, n_requests: int = 96,
+             slots: int = 64, seed: int = 0) -> float:
+    maxp = MAX_CTX // PAGE + 1
+    alloc = PageAllocator(n_pages, 1, PAGE,
+                          static_max_pages=maxp if static else None)
+    sched = ContinuousBatcher(alloc, slots, max_context=MAX_CTX)
+    for i, (plen, new) in enumerate(request_trace(
+            task, n_requests, seed=seed, max_context=MAX_CTX)):
+        sched.submit(Request(i, plen, new))
+    finished = None
+    for _ in range(200_000):
+        if sched.done():
+            break
+        admitted, active = sched.step(finished) if finished is not None else \
+            sched.step()
+        finished = np.zeros(slots, bool)
+        for s in active:
+            req = sched.slots[s]
+            if req is not None and req.generated >= req.max_new_tokens:
+                finished[s] = True
+    return sched.stats.avg_batch
+
+
+def run(emit):
+    # capacity that holds ~8 max-context requests (the paper's constrained
+    # regime where static allocation throttles the batch)
+    n_pages = 8 * (MAX_CTX // PAGE + 1)
+    out = {}
+    for task in LONGBENCH_STATS:
+        static = simulate(task, n_pages, static=True)
+        lazy = simulate(task, n_pages, static=False)
+        st = LONGBENCH_STATS[task]
+        ideal = min(64.0, n_pages * PAGE / st["mean"])
+        out[task] = (static, lazy, ideal)
+        emit(f"fig4b_{task}_static", 0.0, f"avg_batch={static:.1f}")
+        emit(f"fig4b_{task}_lazy", 0.0, f"avg_batch={lazy:.1f}")
+        emit(f"fig4b_{task}_gain", 0.0,
+             f"model={lazy / max(static, 1e-9) * 100:.0f}% paper<=380% "
+             f"ideal={ideal:.1f}")
+    return out

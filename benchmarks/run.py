@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figure/table mapping:
+
+  fig9_*    Fig. 9/10  throughput vs capacity (throughput_scaling.py)
+  fig11_*   Fig. 11    TP x PP ablation w/ and w/o DPA (tp_pp_ablation.py)
+  fig4b_*   Fig. 4(b)  lazy vs static batch growth — REAL allocator/scheduler
+  fig7_*    Fig. 7(a)  ping-pong I/O overlap latency cuts (io_overlap.py)
+  fig12_*   Fig. 12    per-op latency breakdown, standalone vs GPU+PIM
+  table8_*  Table 8    throughput+utilization across scales (utilization.py)
+  kernel_*  Table 6    kernel-vs-oracle validation (kernel_bench.py)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (io_overlap, kernel_bench, latency_breakdown,
+                            lazy_alloc, throughput_scaling, tp_pp_ablation,
+                            utilization)
+
+    rows: list[tuple[str, float, str]] = []
+
+    def emit(name: str, us: float, derived: str) -> None:
+        rows.append((name, us, derived))
+        print(f"{name},{us:.2f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (throughput_scaling, tp_pp_ablation, lazy_alloc, io_overlap,
+                latency_breakdown, utilization, kernel_bench):
+        try:
+            mod.run(emit)
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod.__name__, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"# {len(rows)} benchmark rows, all suites green")
+
+
+if __name__ == "__main__":
+    main()

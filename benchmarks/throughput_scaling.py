@@ -1,0 +1,55 @@
+"""Paper Fig. 9 + Fig. 10: decode throughput vs system capacity.
+
+Standalone systems (GPU-HBM / GPU-GDDR / baseline PIM / LoL-PIM ①②③) and
+heterogeneous GPU+PIM, for Qwen1.5-7B and -72B over the three LongBench
+tasks, capacities 128 GB -> 1024 GB. Checks the paper's headline claims:
+at 1 TB LoL-PIM beats GPU-GDDR by ~3.5x and baseline PIM by ~4.7x (7B), and
+8.54x / 2.65x for 72B (paper §8.2).
+"""
+from __future__ import annotations
+
+from repro.core import pim_model as PM
+from repro.data.pipeline import LONGBENCH_STATS
+
+CAPS_GB = (128, 256, 512, 1024)
+MODELS = {"7B": PM.QWEN_7B, "72B": PM.QWEN_72B}
+
+
+def systems(cap_gb: int):
+    n = cap_gb // 64
+    return {
+        "gpu-hbm": PM.System(PM.GPU_HBM, max(1, cap_gb // 80)),
+        "gpu-gddr": PM.System(PM.GPU_GDDR, n),
+        "pim-base": PM.lol_pim(n, level=0),
+        "lol-pim": PM.lol_pim(n, level=3),
+        "gpu+lol-pim": PM.lol_pim(n, level=3, gpu_hybrid=True),
+    }
+
+
+def run(emit):
+    claims = []
+    for mname, model in MODELS.items():
+        for task, st in LONGBENCH_STATS.items():
+            kw = dict(avg_ctx=st["mean"], max_ctx=32768,
+                      ctx_cv=st["std"] / st["mean"])
+            by_cap = {}
+            for cap in CAPS_GB:
+                for sname, sys in systems(cap).items():
+                    r = PM.throughput(sys, model, **kw)
+                    by_cap[(cap, sname)] = r["tokens_per_s"]
+                    emit(f"fig9_{mname}_{task}_{cap}GB_{sname}",
+                         r["t_step"] * 1e6, f"{r['tokens_per_s']:.0f}tok/s")
+            if model is PM.QWEN_7B and task == "musique":
+                lol, base = by_cap[(1024, "lol-pim")], by_cap[(1024, "pim-base")]
+                gddr = by_cap[(1024, "gpu-gddr")]
+                claims.append(("7B lol/pim-base @1TB", lol / max(base, 1e-9), 4.74))
+                claims.append(("7B lol/gpu-gddr @1TB", lol / max(gddr, 1e-9), 3.53))
+            if model is PM.QWEN_72B and task == "musique":
+                lol, base = by_cap[(1024, "lol-pim")], by_cap[(1024, "pim-base")]
+                gddr = by_cap[(1024, "gpu-gddr")]
+                claims.append(("72B lol/pim-base @1TB", lol / max(base, 1e-9), 2.65))
+                claims.append(("72B lol/gpu-gddr @1TB", lol / max(gddr, 1e-9), 8.54))
+    for name, got, paper in claims:
+        emit(f"claim_{name.replace(' ', '_').replace('/', '_over_')}",
+             0.0, f"model={got:.2f}x paper={paper}x")
+    return claims

@@ -1,0 +1,36 @@
+"""Paper Table 8: throughput + compute utilization across model scales.
+
+Qwen 7B/14B/72B on Musique at the paper's node counts (4/5/16), for
+baseline PIM, LoL-PIM(①②) and LoL-PIM(①②③). The model was calibrated on
+the 7B row ONLY; 14B and 72B are predictions (DESIGN.md / pim_model.py).
+"""
+from __future__ import annotations
+
+from repro.core import pim_model as PM
+from repro.data.pipeline import LONGBENCH_STATS
+
+PAPER = {  # (tok/s, util%) per Table 8
+    "7B": {"nodes": 4, "model": PM.QWEN_7B,
+           0: (1833, 15.1), 2: (2455, 20.2), 3: (3668, 30.1)},
+    "14B": {"nodes": 5, "model": PM.QWEN_14B,
+            0: (1309, 15.4), 2: (1737, 20.5), 3: (2553, 30.1)},
+    "72B": {"nodes": 16, "model": PM.QWEN_72B,
+            0: (737, 12.8), 2: (1211, 21.1), 3: (1740, 30.3)},
+}
+
+
+def run(emit):
+    st = LONGBENCH_STATS["musique"]
+    kw = dict(avg_ctx=st["mean"], max_ctx=32768, ctx_cv=st["std"] / st["mean"])
+    out = {}
+    for name, row in PAPER.items():
+        for lvl in (0, 2, 3):
+            r = PM.throughput(PM.lol_pim(row["nodes"], level=lvl),
+                              row["model"], **kw)
+            ptok, putil = row[lvl]
+            out[(name, lvl)] = r
+            emit(f"table8_{name}_lvl{lvl}", r["t_step"] * 1e6,
+                 f"model={r['tokens_per_s']:.0f}tok/s_{r['util'] * 100:.1f}% "
+                 f"paper={ptok}tok/s_{putil}% "
+                 f"err={abs(r['tokens_per_s'] - ptok) / ptok * 100:.0f}%")
+    return out

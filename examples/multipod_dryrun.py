@@ -1,0 +1,28 @@
+"""AOT-compile one production cell and print its roofline — the multi-pod
+dry-run as a 20-line script.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+
+(The full 68-cell sweep: PYTHONPATH=src python -m repro.launch.dryrun --all
+ --both-meshes.)
+"""
+import sys
+
+# NOTE: repro.launch.dryrun sets XLA_FLAGS for 512 host devices as its very
+# first statement — import it before anything touches jax.
+from repro.launch.dryrun import run_cell
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-1b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+
+res = run_cell(arch, shape, multi_pod=True, save=False)
+if res["ok"]:
+    r, m = res["roofline"], res["memory"]
+    print(f"\ncell {res['cell']} on {res['devices']} devices:")
+    print(f"  peak memory/device : {m['peak_bytes_tpu_adjusted'] / 2**30:.2f} GiB")
+    print(f"  compute term       : {r['t_compute'] * 1e3:.2f} ms")
+    print(f"  memory term        : {r['t_memory'] * 1e3:.2f} ms")
+    print(f"  collective term    : {r['t_collective'] * 1e3:.2f} ms")
+    print(f"  bottleneck         : {r['bottleneck']}")
+else:
+    print("FAILED:", res["error"])

@@ -1,0 +1,29 @@
+"""gemma3-27b — dense GQA, 5:1 local:global interleave, 128k context
+[hf:google/gemma-3-1b-pt family; unverified].
+
+local layers use a 1024-token sliding window (bounded KV pages); every 6th
+layer is global full attention (ITPP-sharded at long context). long_500k runs:
+5/6 of layers have window-bounded KV and the global layers' 500k KV shards
+over the whole pod via ITPP (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig, register, set_skips
+
+CONFIG = register(ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    d_head=128,
+    d_ff=21504,
+    vocab_size=262144,
+    pattern=("local", "local", "local", "local", "local", "attn"),
+    sliding_window=1024,
+    act="geglu",
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:google/gemma-3-27b-pt",
+))
+set_skips(CONFIG.name, set())

@@ -1,0 +1,28 @@
+"""whisper-small — encoder-decoder audio backbone [arXiv:2212.04356; unverified].
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings [B, 1500, d_model] for the encoder.
+Decoder = LM backbone with cross-attention to the 1500 encoder states.
+Full attention, enc-dec -> long_500k skipped (DESIGN.md §6). vocab 51865 is
+padded to 52224 (Megatron-style) for 16-way vocab sharding.
+"""
+from repro.configs.base import ModelConfig, register, set_skips
+
+CONFIG = register(ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,           # decoder layers
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_head=64,
+    d_ff=3072,
+    vocab_size=51865,
+    act="gelu",
+    rope_kind="none",      # learned absolute positions (sinusoidal here)
+    enc_layers=12,
+    enc_seq=1500,
+    cross_attn=True,
+    source="arXiv:2212.04356",
+))
+set_skips(CONFIG.name, {"long_500k"})

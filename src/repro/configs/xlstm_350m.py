@@ -1,0 +1,26 @@
+"""xlstm-350m — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+Attention-free: constant-size recurrent state instead of a KV cache, so the
+paper's ITPP/DPA KV-cache machinery is inapplicable by design (noted in
+DESIGN.md §6 / §Arch-applicability); decode uses recurrent state slots. The
+assignment's d_ff=0 means the xLSTM blocks carry their own up/down
+projections (ssm_expand).
+"""
+from repro.configs.base import ModelConfig, register, set_skips
+
+CONFIG = register(ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=256,            # qkv head dim inside mLSTM blocks
+    d_ff=0,
+    vocab_size=50304,
+    pattern=("mlstm", "slstm"),
+    ssm_expand=2,
+    rope_kind="none",
+    source="arXiv:2405.04517",
+))
+set_skips(CONFIG.name, set())   # recurrent -> long_500k applies

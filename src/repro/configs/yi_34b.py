@@ -1,0 +1,22 @@
+"""yi-34b — llama-arch dense GQA [arXiv:2403.04652; hf].
+
+56 query heads: indivisible by a 16-way model axis — the showcase for ITPP
+(token-parallel) sharding over head-first allocation (DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig, register, set_skips
+
+CONFIG = register(ModelConfig(
+    name="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,            # 56 x 128 = 7168
+    d_ff=20480,
+    vocab_size=64000,
+    act="swiglu",
+    rope_theta=5_000_000.0,
+    source="arXiv:2403.04652",
+))
+set_skips(CONFIG.name, {"long_500k"})

@@ -1,0 +1,193 @@
+"""DPA-style paged KV cache: page pool + Va2Pa block tables.
+
+The paper's Direct-PIM-Access controller keeps a Va2Pa table so a request's
+KV-cache lives in lazily-allocated, non-contiguous chunks; PIM commands are
+generated length-generically (Dyn-Loop) and resolve physical rows at dispatch.
+The XLA analogue (DESIGN.md §2): a fixed page pool compiled once, with block
+tables and context lengths as *runtime data* — one program serves every
+context length, memory is allocated page-by-page as requests grow.
+
+Device-side ops here are the single-shard reference semantics; the sharded
+ITPP version lives in ``core/itpp.py`` and the TPU kernel in
+``kernels/paged_attention.py``. All three agree (tested).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NEG_INF, decode_attention_ref
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    """Static geometry of the paged pool (compile-time constants)."""
+    n_layers: int          # attention layers holding KV
+    n_pages: int           # total pages in the pool (divisible by shards)
+    page_size: int         # tokens per page
+    n_kv_heads: int
+    d_head: int
+    max_pages_per_req: int # block-table width
+    dtype: str = "bfloat16"
+    ring: bool = False     # sliding-window pool: table slots recycle mod width
+
+    @property
+    def tokens(self) -> int:
+        return self.n_pages * self.page_size
+
+    def bytes(self, bytes_per_el: int = 2) -> int:
+        return (2 * self.n_layers * self.n_pages * self.page_size
+                * self.n_kv_heads * self.d_head * bytes_per_el)
+
+
+def init_pool(spec: PoolSpec):
+    shape = (spec.n_layers, spec.n_pages, spec.page_size,
+             spec.n_kv_heads, spec.d_head)
+    z = jnp.zeros(shape, jnp.dtype(spec.dtype))
+    return {"k": z, "v": z}
+
+
+def pool_spec_for(cfg, shape, parallel, *, n_shards: int | None = None,
+                  slack_pages: int = 0) -> PoolSpec:
+    """Pool geometry for a (ModelConfig, ShapeConfig, ParallelConfig) cell."""
+    kinds = cfg.block_kinds()
+    n_attn = sum(1 for k in kinds if k in ("attn", "local"))
+    if cfg.family == "encdec":
+        n_attn = cfg.n_layers
+    ps = parallel.page_size
+    # sliding-window layers only ever need window+page live tokens; if ALL
+    # attention layers are windowed the pool is a ring capped by the window.
+    all_windowed = n_attn > 0 and all(
+        k == "local" for k in kinds if k in ("attn", "local"))
+    ring = bool(all_windowed and cfg.sliding_window
+                and shape.seq_len > cfg.sliding_window)
+    eff_len = min(shape.seq_len, cfg.sliding_window + ps) if ring \
+        else shape.seq_len
+    per_req = -(-eff_len // ps) + 1          # ceil + 1 growth page
+    n_pages = shape.global_batch * per_req + slack_pages
+    shards = n_shards or (parallel.dp * parallel.tp * parallel.pods)
+    n_pages = -(-n_pages // shards) * shards
+    return PoolSpec(n_layers=max(n_attn, 1), n_pages=n_pages, page_size=ps,
+                    n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                    max_pages_per_req=per_req, dtype=cfg.dtype, ring=ring)
+
+
+# ---------------------------------------------------------------------------
+# reference device ops (single shard)
+# ---------------------------------------------------------------------------
+
+def write_token(pool_layer_k, pool_layer_v, k_new, v_new, page_ids, offsets):
+    """Append one token's K/V per request.
+
+    pool_layer_{k,v} [P, page, KVH, D]; k_new/v_new [B, KVH, D];
+    page_ids/offsets [B] — physical page + in-page slot for each request's
+    current token (allocator-provided; distinct requests never share a page).
+    """
+    pk = pool_layer_k.at[page_ids, offsets].set(k_new.astype(pool_layer_k.dtype),
+                                                mode="drop")
+    pv = pool_layer_v.at[page_ids, offsets].set(v_new.astype(pool_layer_v.dtype),
+                                                mode="drop")
+    return pk, pv
+
+
+def write_prefill(pool_layer_k, pool_layer_v, k_seq, v_seq, block_table,
+                  ctx_start=0, ring_width: int = 0):
+    """Scatter a whole prefilled sequence into the pool.
+
+    k_seq/v_seq [B, S, KVH, D]; block_table [B, maxp]. Token t of request b
+    goes to page block_table[b, (ctx_start+t)//page] slot (ctx_start+t)%page.
+    ``ring_width``>0: sliding-window pools recycle table slots mod ring_width
+    (later tokens overwrite expired pages — bounded KV, DPA-style reuse).
+    """
+    B, S = k_seq.shape[:2]
+    page = pool_layer_k.shape[1]
+    t = ctx_start + jnp.arange(S)
+    vpage = t // page                                     # [S]
+    if ring_width:
+        vpage = vpage % ring_width
+    off = t % page
+    pids = jnp.take_along_axis(block_table,
+                               jnp.broadcast_to(vpage[None], (B, S)), axis=1)
+    offs = jnp.broadcast_to(off[None], (B, S))
+    pk = pool_layer_k.at[pids, offs].set(k_seq.astype(pool_layer_k.dtype),
+                                         mode="drop")
+    pv = pool_layer_v.at[pids, offs].set(v_seq.astype(pool_layer_v.dtype),
+                                         mode="drop")
+    return pk, pv
+
+
+def gather_kv(pool_layer_k, pool_layer_v, block_table):
+    """[B, maxp] -> contiguous [B, maxp*page, KVH, D] (reference only)."""
+    B, maxp = block_table.shape
+    safe = jnp.maximum(block_table, 0)
+    k = pool_layer_k[safe]                                # [B, maxp, page, KVH, D]
+    v = pool_layer_v[safe]
+    page = k.shape[2]
+    return (k.reshape(B, maxp * page, *k.shape[3:]),
+            v.reshape(B, maxp * page, *v.shape[3:]))
+
+
+def paged_decode_attention_ref(q, pool_layer_k, pool_layer_v, block_table,
+                               ctx_len, *, window: int = 0):
+    """Oracle: gather pages then dense decode attention.
+
+    q [B, H, D]; ctx_len [B] counts tokens INCLUDING the current one (already
+    written to the pool).
+    """
+    k, v = gather_kv(pool_layer_k, pool_layer_v, block_table)
+    return decode_attention_ref(q, k, v, ctx_len, window=window)
+
+
+def partial_decode_attention(q, k_pages, v_pages, token_valid, *,
+                             window_lo=None, ctx_len=None):
+    """Masked partial attention over gathered pages -> (o, l, m).
+
+    q [B, H, D]; k_pages/v_pages [B, mp, page, KVH, D];
+    token_valid [B, mp, page] bool — which gathered slots are real tokens of
+    this request (ownership x ctx mask, computed by the caller).
+    Returns fp32 partials: o [B, H, D], l [B, H], m [B, H] for the stable
+    cross-shard merge (the EPU aggregation of ITPP).
+    """
+    B, mp, page, KVH, D = k_pages.shape
+    H = q.shape[1]
+    G = H // KVH
+    # keep gathered pages in their storage dtype: the dot accumulates fp32
+    # (preferred_element_type) without materializing fp32 copies of the KV
+    # stream (EXPERIMENTS.md §Perf H2)
+    qf = q.reshape(B, KVH, G, D)
+    kf = k_pages.reshape(B, mp * page, KVH, D)
+    vf = v_pages.reshape(B, mp * page, KVH, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, kf,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(
+                       jnp.float32(D))
+    mask = token_valid.reshape(B, 1, 1, mp * page)
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1)                                    # [B,KVH,G]
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_pages.dtype), vf,
+                   preferred_element_type=jnp.float32)
+    return (o.reshape(B, H, D), l.reshape(B, H), m.reshape(B, H))
+
+
+def merge_partials(o, l, m, *, axis=None):
+    """Stable softmax merge of shard partials (paper's ITPP/EPU aggregation).
+
+    With ``axis`` (a mesh axis name or tuple) merges across shards via
+    collectives; with axis=None merges a leading stacked dim instead
+    (single-device reference; o [N, B, H, D] etc.).
+    """
+    if axis is None:
+        mg = m.max(axis=0)
+        corr = jnp.exp(m - mg[None])
+        lg = (l * corr).sum(axis=0)
+        og = (o * corr[..., None]).sum(axis=0)
+    else:
+        mg = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - mg)
+        lg = jax.lax.psum(l * corr, axis)
+        og = jax.lax.psum(o * corr[..., None], axis)
+    return og / jnp.maximum(lg, 1e-30)[..., None]

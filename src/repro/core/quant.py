@@ -1,0 +1,54 @@
+"""int8 weight-only quantization for serving.
+
+Symmetric per-output-channel int8: a weight [.., D_in, D_out] becomes
+``{"q": int8 [.., D_in, D_out], "s": f32 [.., 1, D_out]}``. Dequantization
+happens per-layer inside the decode/prefill scan (the int8 tensor is what
+streams from HBM — decode is weight-bandwidth-bound, so this is a ~2x
+decode-throughput lever and the difference between mixtral-8x22b fitting a
+single v5e pod (17.2 -> ~9.6 GiB/dev) or not; EXPERIMENTS.md §Perf Q1).
+
+Quantized leaves keep the original pytree paths with a trailing "q"/"s" so
+the sharding rules apply unchanged (distributed/sharding.py strips the
+suffix when matching names).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# weight names worth quantizing (large matmul operands on the serve path)
+QUANT_NAMES = {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "wz", "wx",
+               "wu", "wg", "out_proj", "down", "head", "up", "proj"}
+
+
+def is_qtensor(w) -> bool:
+    return isinstance(w, dict) and set(w) == {"q", "s"}
+
+
+def quantize_tensor(w: jax.Array) -> dict:
+    """[.., D_in, D_out] -> int8 + per-out-channel scale."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    s = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / s), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s}
+
+
+def dequantize_tensor(qw: dict, dtype=jnp.bfloat16) -> jax.Array:
+    return (qw["q"].astype(jnp.float32) * qw["s"]).astype(dtype)
+
+
+def quantize_params(params, *, names=QUANT_NAMES, min_size: int = 1 << 16):
+    """Quantize matching >=2D weight leaves; everything else passes through."""
+    def walk(node, key=None):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if (key in names and hasattr(node, "ndim") and node.ndim >= 2
+                and node.size >= min_size):
+            return quantize_tensor(node)
+        return node
+    return walk(params)
+
+
+def quantized_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

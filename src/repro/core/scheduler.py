@@ -1,0 +1,139 @@
+"""Continuous-batching scheduler with EOS replacement (paper Fig. 2(b)).
+
+Slot-based: the decode batch has ``n_slots`` positions; when a request emits
+EOS (or hits its token budget) its pages are freed and the slot is refilled
+from the waiting queue in the same scheduling tick — the paper's
+"Request-1 ... replaced with Request-5" flow. Works with either lazy (DPA)
+or static (baseline) allocation, which is how the lazy-allocation benchmark
+reproduces the paper's batch-size growth (Fig. 4(b), §5.4).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.allocator import PageAllocator
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt_len: int
+    max_new_tokens: int
+    arrived_at: int = 0
+    generated: int = 0
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.generated
+
+
+@dataclass
+class SchedulerStats:
+    steps: int = 0
+    occupied_slot_steps: int = 0
+    completed: int = 0
+    admitted: int = 0
+    preempted: int = 0
+    batch_trace: list = field(default_factory=list)
+
+    @property
+    def avg_batch(self) -> float:
+        return self.occupied_slot_steps / max(1, self.steps)
+
+
+class ContinuousBatcher:
+    def __init__(self, allocator: PageAllocator, n_slots: int, *,
+                 max_context: int, n_rows: int = 1):
+        self.alloc = allocator
+        self.n_slots = n_slots
+        self.max_context = max_context
+        self.n_rows = n_rows
+        self.slots: list[Request | None] = [None] * n_slots
+        self.queue: deque[Request] = deque()
+        self.stats = SchedulerStats()
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _row_of_slot(self, slot: int) -> int:
+        return slot * self.n_rows // self.n_slots
+
+    def _try_admit(self) -> list[tuple[int, Request]]:
+        """Fill empty slots from the queue. Returns [(slot, request)] newly
+        admitted (the engine must run prefill for these)."""
+        admitted = []
+        for s in range(self.n_slots):
+            if self.slots[s] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            row = self._row_of_slot(s) if self.alloc.policy == "row_affine" else None
+            if not self.alloc.can_admit(req.prompt_len, row):
+                continue   # head-of-line blocked on memory; try next tick
+            self.queue.popleft()
+            self.alloc.admit(req.req_id, req.prompt_len, row)
+            self.slots[s] = req
+            self.stats.admitted += 1
+            admitted.append((s, req))
+        return admitted
+
+    def step(self, finished_mask: np.ndarray | None = None):
+        """One decode tick.
+
+        ``finished_mask`` [n_slots] — which active slots finished on the
+        *previous* step (EOS sampled / budget reached). Frees their pages,
+        refills slots, lazily grows every active request by one token.
+        Returns (admitted, active_slots).
+        """
+        if finished_mask is not None:
+            for s in range(self.n_slots):
+                if finished_mask[s] and self.slots[s] is not None:
+                    self.alloc.free(self.slots[s].req_id)
+                    self.stats.completed += 1
+                    self.slots[s] = None
+        admitted = self._try_admit()
+        active = []
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated += 1
+            if req.total_len <= self.max_context:
+                try:
+                    self.alloc.ensure(req.req_id, req.total_len)
+                except MemoryError:
+                    # pool exhausted mid-decode: preempt (free pages, requeue
+                    # at the front for re-prefill of prompt+generated) — the
+                    # lazy-allocation analogue of vLLM preemption
+                    self.alloc.free(req.req_id)
+                    req.prompt_len = req.total_len
+                    req.max_new_tokens = max(1, req.max_new_tokens
+                                             - req.generated)
+                    req.generated = 0
+                    self.queue.appendleft(req)
+                    self.slots[s] = None
+                    self.stats.preempted += 1
+                    continue
+            active.append(s)
+        self.stats.steps += 1
+        self.stats.occupied_slot_steps += len(active)
+        self.stats.batch_trace.append(len(active))
+        return admitted, active
+
+    # ------------------------------------------------------------------
+    def block_tables(self, width: int) -> np.ndarray:
+        """Device block-table snapshot [n_slots, width]."""
+        out = np.full((self.n_slots, width), -1, np.int32)
+        for s, req in enumerate(self.slots):
+            if req is not None:
+                out[s] = self.alloc.block_table(req.req_id, width)
+        return out
+
+    def context_lens(self) -> np.ndarray:
+        return np.asarray([0 if r is None else r.total_len
+                           for r in self.slots], np.int32)
+
+    def done(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: forward flash attention (prefill/training forward).
+
+The jnp online-softmax path materializes the [Sq, kv_chunk] score/probability
+tensors in HBM every chunk — measured as the dominant memory term of the
+prefill cells (EXPERIMENTS.md §Perf P3). This kernel keeps them in VMEM:
+HBM traffic collapses to Q + K + V + O.
+
+Grid: (batch, kv_head, q_blocks, kv_blocks) — kv innermost, sequential per
+q block, with (m, l, acc) accumulators in VMEM scratch; K/V tiles stream
+through the Pallas pipeline (double-buffered). GQA-grouped: the q tile is
+[G * q_blk, D] for one kv head, so K/V are never repeated. Causal masking
+skips fully-masked kv blocks' contribution (they still stream; a block-
+sparse skip via dynamic grids is a further step).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            q_blk: int, kv_blk: int, n_kv: int, g: int, causal: bool,
+            window: int, q_offset: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # [G, q_blk, D]
+    k = k_ref[0, :, 0, :]                           # [kv_blk, D]
+    v = v_ref[0, :, 0, :]
+    d = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / math.sqrt(d)                            # [G, q_blk, kv_blk]
+    q_pos = (q_offset + qi * q_blk
+             + jax.lax.broadcasted_iota(jnp.int32, (1, q_blk, 1), 1))
+    kv_pos = ki * kv_blk + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, kv_blk), 2)
+    ok = jnp.full((1, q_blk, kv_blk), True)
+    if causal:
+        ok = ok & (kv_pos <= q_pos)
+    if window:
+        ok = ok & (kv_pos > q_pos - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=2))      # [G, q_blk]
+    p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(axis=2)
+    acc_s[...] = acc_s[...] * corr[..., None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_s[...]
+                       / jnp.maximum(l_s[...], 1e-30)[..., None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, q_blk: int = 256,
+                        kv_blk: int = 256, interpret: bool = True):
+    """q [B, Sq, H, D]; k/v [B, Skv, KVH, D] -> [B, Sq, H, D].
+
+    Static causal/window (per-layer kernels are built per window value).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    q_blk = min(q_blk, Sq)
+    kv_blk = min(kv_blk, Skv)
+    assert Sq % q_blk == 0 and Skv % kv_blk == 0, (Sq, q_blk, Skv, kv_blk)
+    grid = (B, KVH, Sq // q_blk, Skv // kv_blk)
+    qg = q.reshape(B, Sq, KVH, G, D)
+
+    def q_map(b, h, qi, ki):
+        return (b, h, 0, qi, 0)
+
+    def kv_map(b, h, qi, ki):
+        return (b, ki, h, 0)
+
+    kernel = functools.partial(_kernel, q_blk=q_blk, kv_blk=kv_blk,
+                               n_kv=Skv // kv_blk, g=G, causal=causal,
+                               window=window, q_offset=q_offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # q arranged [B, KVH, G, Sq, D] via index_map on the reshaped view
+            pl.BlockSpec((1, 1, G, q_blk, D),
+                         lambda b, h, qi, ki: (b, h, 0, qi, 0)),
+            pl.BlockSpec((1, kv_blk, 1, D), kv_map),
+            pl.BlockSpec((1, kv_blk, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, q_blk, D),
+                               lambda b, h, qi, ki: (b, h, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, q_blk), jnp.float32),
+            pltpu.VMEM((G, q_blk), jnp.float32),
+            pltpu.VMEM((G, q_blk, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg.transpose(0, 2, 3, 1, 4), k, v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: ITPP split-K decode attention partials.
+
+The paper's §4.3 compute: the K-cache is partitioned along the TOKEN
+dimension; each partition computes a partial attention (o, l, m) and the
+partials merge with the stable log-sum-exp rule (the PIM Controller Hub's
+EPU aggregation). On the mesh, partitions map to shards (core/itpp.py); on
+one chip this kernel is the shard-local compute with splits = grid steps —
+so it is also how flash-decoding-style split-K parallelism lands on the MXU.
+
+Grid: (B, KVH, n_splits). Each step streams its [split, D] K/V tile
+HBM->VMEM (pipeline double-buffers = ping-pong, §6) and emits one partial.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(ctx_ref, q_ref, k_ref, v_ref, o_ref, l_ref, m_ref, *,
+            split: int):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)                  # [G, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [split, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    d = q.shape[-1]
+    sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    sc = sc / jnp.sqrt(jnp.float32(d))                   # [G, split]
+    tok = s * split + jax.lax.broadcasted_iota(jnp.int32, (1, split), 1)
+    ok = tok < ctx_ref[b]
+    sc = jnp.where(ok, sc, NEG_INF)
+    m = sc.max(axis=1)                                   # [G]
+    p = jnp.where(ok, jnp.exp(sc - m[:, None]), 0.0)
+    l = p.sum(axis=1)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0, 0, 0] = o
+    l_ref[0, 0, 0] = l
+    m_ref[0, 0, 0] = m
+
+
+def flash_decode(q, k, v, ctx_lens, *, n_splits: int = 8,
+                 interpret: bool = True):
+    """q [B, KVH, G, D]; k/v [B, T, KVH, D]; ctx_lens [B].
+
+    Returns per-split fp32 partials (o [S,B,KVH,G,D], l [S,B,KVH,G],
+    m [S,B,KVH,G]) for the stable ITPP merge (ref.merge_flash_partials /
+    core.paged_kv.merge_partials).
+    """
+    B, KVH, G, D = q.shape
+    T = k.shape[1]
+    assert T % n_splits == 0, (T, n_splits)
+    split = T // n_splits
+    grid = (B, KVH, n_splits)
+    kernel = functools.partial(_kernel, split=split)
+
+    def q_map(b, h, s, ctx):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, s, ctx):
+        return (b, s, h, 0)
+
+    def po_map(b, h, s, ctx):
+        return (s, b, h, 0, 0)
+
+    def pl_map(b, h, s, ctx):
+        return (s, b, h, 0)
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), q_map),
+                pl.BlockSpec((1, split, 1, D), kv_map),
+                pl.BlockSpec((1, split, 1, D), kv_map),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, G, D), po_map),
+                pl.BlockSpec((1, 1, 1, G), pl_map),
+                pl.BlockSpec((1, 1, 1, G), pl_map),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_splits, B, KVH, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((n_splits, B, KVH, G), jnp.float32),
+            jax.ShapeDtypeStruct((n_splits, B, KVH, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ctx_lens.astype(jnp.int32), q, k, v)

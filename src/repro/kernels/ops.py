@@ -1,0 +1,73 @@
+"""jit'd wrappers around the Pallas kernels, with reference fallbacks.
+
+On the TPU target, pass ``use_pallas=True`` (ParallelConfig.use_pallas) to
+run the kernels compiled; on CPU (this container) the kernels execute in
+interpret mode for correctness tests while production paths lower the
+pure-jnp reference math (identical semantics — tests assert allclose).
+
+Integration points:
+  * ``decode_attention`` — full-attention decode over the paged pool
+    (core/itpp.py's shard-local gather+partial math, kernelized),
+  * ``itpp_partials``   — split-K partials for the cross-shard merge,
+  * ``mamba_mixer``     — Mamba2 chunk scan for train/prefill.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssm_scan import ssm_chunk_scan
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                     use_pallas: bool = True, interpret: bool = True):
+    """q [B, KVH, G, D] -> [B, KVH, G, D] (q.dtype)."""
+    if use_pallas:
+        return paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                               interpret=interpret)
+    return REF.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   ctx_lens).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("n_splits", "use_pallas", "interpret"))
+def itpp_partials(q, k, v, ctx_lens, *, n_splits: int = 8,
+                  use_pallas: bool = True, interpret: bool = True):
+    """Split-K partials (o, l, m) for the stable ITPP/EPU merge."""
+    if use_pallas:
+        return flash_decode(q, k, v, ctx_lens, n_splits=n_splits,
+                            interpret=interpret)
+    return REF.flash_decode_ref(q, k, v, ctx_lens, n_splits)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                   "interpret"))
+def attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                  use_pallas: bool = True, interpret: bool = True):
+    """Forward flash attention (prefill/training fwd): [B,S,H,D] -> same."""
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention_fwd
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   interpret=interpret)
+    from repro.models.layers import flash_attention
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def mamba_mixer(q, k, v, log_a, log_g, *, chunk: int = 128,
+                use_pallas: bool = True, interpret: bool = True):
+    """Chunked selective scan -> (y [B,S,H,P] f32, state [B,H,N,P] f32)."""
+    if use_pallas:
+        return ssm_chunk_scan(q, k, v, log_a, log_g, chunk=chunk,
+                              interpret=interpret)
+    y, (C, _, _) = REF.ssm_chunk_scan_ref(q, k, v, log_a, log_g, None, chunk)
+    return y, C
+
+
+def merge_partials(o, l, m):
+    return REF.merge_flash_partials(o, l, m)

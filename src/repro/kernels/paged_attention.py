@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: decode attention over a paged KV pool.
+
+The DPA Va2Pa indirection in kernel form: block tables ride in as
+scalar-prefetch operands so each grid step's ``BlockSpec`` index_map resolves
+the *physical* page to stream HBM->VMEM — command-stream-free dynamic paging,
+exactly the paper's Dyn-Modi operand rewriting (§5.2) mapped onto Pallas.
+
+Grid: (batch, kv_head, n_pages). The page axis is innermost and iterates
+sequentially per (b, h) on TPU, so the online-softmax accumulators (m, l, o)
+live in VMEM scratch across pages, and the multi-step grid gives automatic
+double-buffering of the K/V page streams — the paper's ping-pong I/O
+buffering (§6) realized by the Pallas pipeline rather than explicit mux logic.
+
+Tile shapes: K/V pages are [page_size, D] per (kv-head); with page_size=256,
+D=128 the MXU operands are 128-aligned. q tile is [G, D] (G = query heads per
+kv head).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, ctx_ref,                 # scalar prefetch
+            q_ref, k_ref, v_ref,             # VMEM tiles
+            o_ref,                           # output tile
+            m_s, l_s, acc_s,                 # scratch
+            *, page: int, n_pages: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # [G, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)             # [page, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    d = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))                      # [G, page]
+    tok = i * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    ok = tok < ctx_ref[b]
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))            # [G]
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(axis=1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _done():
+        o_ref[0, 0] = (acc_s[...]
+                       / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                    interpret: bool = True):
+    """q [B, KVH, G, D]; k_pages/v_pages [P, page, KVH, D];
+    block_tables [B, maxp] int32 (-1 padded; clamped to 0, masked by ctx);
+    ctx_lens [B] int32. Returns [B, KVH, G, D] in q.dtype.
+    """
+    B, KVH, G, D = q.shape
+    P_, page, _, _ = k_pages.shape
+    maxp = block_tables.shape[1]
+    bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+
+    grid = (B, KVH, maxp)
+
+    def q_map(b, h, i, bt_ref, ctx_ref):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, i, bt_ref, ctx_ref):
+        return (bt_ref[b, i], 0, h, 0)
+
+    kernel = functools.partial(_kernel, page=page, n_pages=maxp)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), q_map),
+                pl.BlockSpec((1, page, 1, D), kv_map),
+                pl.BlockSpec((1, page, 1, D), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),      # m
+                pltpu.VMEM((G,), jnp.float32),      # l
+                pltpu.VMEM((G, D), jnp.float32),    # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        interpret=interpret,
+    )(bt, ctx_lens.astype(jnp.int32), q, k_pages, v_pages)

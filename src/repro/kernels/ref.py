@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NEG_INF
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens):
+    """Decode attention over a paged pool.
+
+    q [B, KVH, G, D]; k_pages/v_pages [P, page, KVH, D];
+    block_tables [B, maxp]; ctx_lens [B] (valid tokens incl. current).
+    Returns [B, KVH, G, D] fp32.
+    """
+    B, KVH, G, D = q.shape
+    maxp = block_tables.shape[1]
+    page = k_pages.shape[1]
+    safe = jnp.maximum(block_tables, 0)
+    k = k_pages[safe].reshape(B, maxp * page, KVH, D)     # [B, T, KVH, D]
+    v = v_pages[safe].reshape(B, maxp * page, KVH, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    tok = jnp.arange(maxp * page)[None]
+    ok = tok < ctx_lens[:, None]
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+
+
+def flash_decode_ref(q, k, v, ctx_len, n_splits: int):
+    """ITPP split-K decode partials oracle.
+
+    q [B, KVH, G, D]; k/v [B, T, KVH, D]; ctx_len [B].
+    Returns per-split partials (o [S,B,KVH,G,D], l [S,B,KVH,G], m [S,...])
+    whose stable merge equals full attention.
+    """
+    B, KVH, G, D = q.shape
+    T = k.shape[1]
+    assert T % n_splits == 0
+    w = T // n_splits
+    outs, ls, ms = [], [], []
+    for s in range(n_splits):
+        ks = k[:, s * w:(s + 1) * w].astype(jnp.float32)
+        vs = v[:, s * w:(s + 1) * w].astype(jnp.float32)
+        sc = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32), ks) \
+            / jnp.sqrt(jnp.float32(D))
+        tok = s * w + jnp.arange(w)
+        ok = tok[None] < ctx_len[:, None]
+        sc = jnp.where(ok[:, None, None, :], sc, NEG_INF)
+        m = sc.max(-1)
+        p = jnp.where(ok[:, None, None, :], jnp.exp(sc - m[..., None]), 0.0)
+        l = p.sum(-1)
+        o = jnp.einsum("bkgt,btkd->bkgd", p, vs)
+        outs.append(o)
+        ls.append(l)
+        ms.append(m)
+    return jnp.stack(outs), jnp.stack(ls), jnp.stack(ms)
+
+
+def merge_flash_partials(o, l, m):
+    """(S,...) partials -> merged attention output (log-sum-exp merge)."""
+    mg = m.max(0)
+    c = jnp.exp(m - mg[None])
+    lg = (l * c).sum(0)
+    og = (o * c[..., None]).sum(0)
+    return og / jnp.maximum(lg, 1e-30)[..., None]
+
+
+def ssm_chunk_scan_ref(q, k, v, log_a, log_g, h0, chunk: int):
+    """Chunked GLA oracle — wraps models.ssm.chunked_gla (itself validated
+    against the exact sequential recurrence in tests)."""
+    from repro.models.ssm import chunked_gla
+    return chunked_gla(q, k, v, log_a, log_g, chunk=chunk, normalize=False,
+                       state=h0)

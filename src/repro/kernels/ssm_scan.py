@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: Mamba2 chunked selective-scan (gated linear attention).
+
+Chunkwise-parallel SSM: inside a chunk the contribution is an attention-like
+matmul pair (MXU work); across chunks a [N, P] recurrent state carries in
+VMEM scratch while the grid streams chunk tiles HBM->VMEM (double-buffered —
+the ping-pong pattern again). Grid: (B, H, n_chunks), chunks innermost.
+
+Matches ``ref.ssm_chunk_scan_ref`` (= models.ssm.chunked_gla with
+normalize=False, itself validated against the exact recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, la_ref, lg_ref, y_ref, hout_ref, state_s, *,
+            chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_s[...] = jnp.zeros_like(state_s)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)            # [chunk, N]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # [chunk, P]
+    la = la_ref[0, :, 0].astype(jnp.float32)             # [chunk]
+    lg = lg_ref[0, :, 0].astype(jnp.float32)
+
+    bcum = jnp.cumsum(la)                                # [chunk]
+    btot = bcum[-1]
+    wlog = bcum[:, None] - bcum[None, :] + lg[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    wlog = jnp.where(ii >= jj, wlog, NEG_INF)
+    wmat = jnp.exp(jnp.clip(wlog, NEG_INF, 60.0))
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * wmat
+    y = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    state = state_s[...]                                 # [N, P]
+    y = y + jnp.exp(bcum)[:, None] * jax.lax.dot_general(
+        q, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    sc = jnp.exp(jnp.clip(btot - bcum + lg, NEG_INF, 60.0))   # [chunk]
+    kv = jax.lax.dot_general(k * sc[:, None], v, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    state_s[...] = state * jnp.exp(btot) + kv
+
+    @pl.when(c == n_chunks - 1)
+    def _done():
+        hout_ref[0, 0] = state_s[...]
+
+
+def ssm_chunk_scan(q, k, v, log_a, log_g, *, chunk: int = 128,
+                   interpret: bool = True):
+    """q,k [B,S,H,N]; v [B,S,H,P]; log_a/log_g [B,S,H].
+
+    Returns (y [B,S,H,P] fp32, state [B,H,N,P] fp32) — zero initial state
+    (pass prior state support via the jnp path for prefill continuation).
+    """
+    B, S, H, N = q.shape
+    P_ = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    grid = (B, H, n_chunks)
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+
+    def seq_map(b, h, c):
+        return (b, c, h, 0)
+
+    def g_map(b, h, c):
+        return (b, c, h)
+
+    def h_map(b, h, c):
+        return (b, h, 0, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, N), seq_map),
+            pl.BlockSpec((1, chunk, 1, N), seq_map),
+            pl.BlockSpec((1, chunk, 1, P_), seq_map),
+            pl.BlockSpec((1, chunk, 1), g_map),
+            pl.BlockSpec((1, chunk, 1), g_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P_), seq_map),
+            pl.BlockSpec((1, 1, N, P_), h_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P_), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, P_), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P_), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_a, log_g)

@@ -1,0 +1,85 @@
+"""Per-op attribution for one dry-run cell — the 'profiler' of the
+hypothesis->change->measure loop (§Perf). Since the runtime is CPU-only, the
+profile is the lowered HLO: top contributors to bytes / flops / collectives,
+with while-loop trip weighting.
+
+  PYTHONPATH=src python -m repro.launch.profile_cell --arch gemma3-27b \
+      --shape decode_32k [--multi-pod] [--top 25] [--kind bytes|coll|flops]
+"""
+import argparse
+import re
+
+import jax
+
+from repro.launch import hlo_analysis as H
+
+
+def profile(arch, shape, multi_pod=False, pod_mode="dp", top=25,
+            parallel=None):
+    from repro.launch.dryrun import build_cell
+    step, args, in_sh, out_sh, plan = build_cell(
+        arch, shape, multi_pod=multi_pod, pod_mode=pod_mode,
+        parallel=parallel)
+    compiled = jax.jit(step, in_shardings=in_sh,
+                       out_shardings=out_sh).lower(*args).compile()
+    txt = compiled.as_text()
+    comps = H.parse_computations(txt)
+    trips = {}
+    for c in comps.values():
+        for body, cond in c.whiles:
+            trips[body] = comps[cond].max_const if cond in comps else 1
+
+    def weight(cname, depth=0):
+        """Product of trip counts on the path from entry (approx: direct)."""
+        w = trips.get(cname, 1)
+        # one level of nesting is common (tick loop > layer loop)
+        for c in comps.values():
+            for body, cond in c.whiles:
+                if body == cname and c.name in trips:
+                    w *= trips[c.name]
+        return w
+
+    rows = []
+    for c in comps.values():
+        w = weight(c.name)
+        for op in c.ops:
+            if op.kind in H._SKIP_BYTES:
+                continue
+            b = op.bytes_ * w
+            fl = 0.0
+            if op.kind == "dot":
+                pass
+            coll = H._shape_bytes(op.out_type) * w if any(
+                op.kind.startswith(k) for k in H.COLLECTIVES) else 0.0
+            meta = re.search(r'op_name="([^"]*)"', op.line)
+            rows.append((b, coll, op.kind, op.out_type[:40], c.name[:34],
+                         (meta.group(1)[-100:] if meta else ""), w))
+    return rows, H.analyze(txt), compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pod-mode", default="dp")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--kind", default="bytes", choices=["bytes", "coll"])
+    args = ap.parse_args()
+    rows, summary, _ = profile(args.arch, args.shape,
+                               multi_pod=args.multi_pod,
+                               pod_mode=args.pod_mode, top=args.top)
+    key = 0 if args.kind == "bytes" else 1
+    rows.sort(key=lambda r: -r[key])
+    print(f"== {args.arch} {args.shape} summary: "
+          f"flops={summary['flops']:.3e} hbm={summary['hbm_bytes'] / 2**30:.2f}GiB "
+          f"coll={summary['collective_bytes'] / 2**30:.2f}GiB ==")
+    for b, coll, kind, t, cname, meta, w in rows[:args.top]:
+        v = b if args.kind == "bytes" else coll
+        if v <= 0:
+            continue
+        print(f"{v / 2**30:8.3f}GiB x{w:4d} {kind:22s} {t:40s} {cname:34s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

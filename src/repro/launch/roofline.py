@@ -1,0 +1,112 @@
+"""§Roofline report: read the dry-run JSONs, emit the per-cell table.
+
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh pod1|pod2|all]
+
+Per (arch x shape x mesh): the three roofline terms (s), dominant bottleneck,
+MODEL_FLOPS / HLO_FLOPs usefulness ratio, and the lever that would move the
+dominant term. Hardware: 197 bf16 TFLOP/s, 819 GB/s HBM, 50 GB/s ICI/link.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str, n_dev: int) -> float:
+    """Useful model FLOPs per device per step (6ND train, 2ND inference)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tok = shape.global_batch * shape.seq_len
+        return 6.0 * n * tok / n_dev
+    if shape.kind == "prefill":
+        tok = shape.global_batch * shape.seq_len
+        return 2.0 * n * tok / n_dev
+    # decode: one token per request + the attention KV read math
+    tok = shape.global_batch
+    attn = (2.0 * shape.global_batch * shape.seq_len
+            * cfg.kv_bytes_per_token() / 2)
+    return (2.0 * n * tok + attn) / n_dev
+
+
+def lever(row: dict) -> str:
+    b = row["roofline"]["bottleneck"]
+    kind = SHAPES[row["shape"]].kind
+    if b == "collective":
+        return ("shrink KV/weight gathers: head/TP attention or bf16 "
+                "collectives" if kind != "decode"
+                else "reduce merge/psum traffic (fewer merge axes)")
+    if b == "memory":
+        return ("bound gathered KV to the window / fuse attention intermediates"
+                if kind == "decode" else
+                "larger attention chunks; bf16 intermediates; fewer rematerialized reads")
+    return "already compute-bound: raise MXU utilization (layout/fusion)"
+
+
+def load(mesh_filter: str = "all"):
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if not d.get("ok"):
+            rows.append(d)
+            continue
+        mesh = "pod2" if d["multi_pod"] else "pod1"
+        if mesh_filter != "all" and mesh != mesh_filter:
+            continue
+        mf = model_flops(d["arch"], d["shape"], d["devices"])
+        d["model_flops_ratio"] = mf / max(d["hlo"]["flops"], 1.0)
+        rows.append(d)
+    return rows
+
+
+def emit_markdown(rows, *, include_levers: bool = True) -> str:
+    out = ["| arch | shape | mesh | peak GiB/dev | t_comp s | t_mem s | "
+           "t_coll s | bottleneck | MODEL/HLO flops |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if not d.get("ok"):
+            out.append(f"| {d['arch']} | {d['shape']} | - | FAIL | | | | | |")
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        mesh = ("pod2" if d["multi_pod"] else "pod1") + \
+            ("/pp" if d.get("pod_mode") == "pp" else "")
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {mesh} | "
+            f"{m.get('peak_bytes_tpu_adjusted', m['peak_bytes']) / 2**30:.2f} | "
+            f"{r['t_compute']:.3f} | {r['t_memory']:.3f} | "
+            f"{r['t_collective']:.3f} | {r['bottleneck']} | "
+            f"{d['model_flops_ratio']:.2f} |")
+    if include_levers:
+        out.append("")
+        out.append("Levers for the dominant term (per bottleneck class):")
+        seen = set()
+        for d in rows:
+            if not d.get("ok"):
+                continue
+            key = (d["roofline"]["bottleneck"], SHAPES[d["shape"]].kind)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(f"- {key[1]}/{key[0]}-bound: {lever(d)}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "all"])
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    print(emit_markdown(rows))
+    n_fail = sum(1 for d in rows if not d.get("ok"))
+    print(f"\n{len(rows) - n_fail} cells ok, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

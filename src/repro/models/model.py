@@ -1,0 +1,671 @@
+"""Unified model zoo: one builder covering dense / MoE / SSM / hybrid /
+enc-dec / VLM architectures from a ``ModelConfig``.
+
+Layer stacks are scan-compiled (stacked params) for compile-time and memory
+sanity at 60-80 layers. Heterogeneous patterns:
+
+* gemma3 local:global — one uniform attention stack, per-layer ``window``
+  flags ride through the scan as data;
+* xlstm — scan over (mLSTM, sLSTM) cycles;
+* zamba2 — scan over Mamba2 sub-stacks with a single shared attention block
+  invoked between cycles (weights shared, zamba2-style);
+* whisper — separate encoder stack (bidirectional) + decoder stack with
+  cross-attention.
+
+Execution is runtime-injected (``Runtime``): sharding constraints, the ITPP
+sharded decode attention, and the expert-parallel MoE are provided by the
+distribution layer; defaults are single-device reference paths so every model
+runs standalone on CPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.core.itpp import ItppSpec, itpp_decode_attention_shard
+
+
+# ---------------------------------------------------------------------------
+# runtime injection
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Runtime:
+    """Distribution hooks; defaults = single-device reference."""
+    constrain: Callable = lambda x, name: x          # sharding constraints
+    itpp: Callable | None = None                     # sharded decode attention
+    moe: Callable | None = None                      # expert-parallel MoE
+    write_pool: Callable | None = None               # sharded prefill writer
+    remat: bool = False
+    gla_chunk: int = 128
+    ring_width: int = 0                              # sliding-window ring pool
+
+    def moe_apply(self, p, cfg, x):
+        if self.moe is not None:
+            return self.moe(p, cfg, x)
+        return MOE.moe_local(p, cfg, x)
+
+    def itpp_apply(self, q, k, v, pk, pv, bt, ctx, npage, noff, window):
+        if self.itpp is not None:
+            return self.itpp(q, k, v, pk, pv, bt, ctx, npage, noff, window)
+        spec = ItppSpec((), (), None, 1, 1, pk.shape[1])
+        return itpp_decode_attention_shard(
+            q, k, v, pk, pv, bt, ctx, npage, noff, window, spec=spec,
+            mesh_axis_sizes={}, max_pages_per_req=bt.shape[1],
+            ring_width=self.ring_width)
+
+
+DEFAULT_RT = Runtime()
+
+
+# ---------------------------------------------------------------------------
+# per-kind layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(key, cfg, dtype, *, cross: bool = False,
+                     with_mlp: bool = True, moe_virtual: int = 0):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "attn": L.init_attention(ks[0], cfg, dtype)}
+    if cross:
+        p["lnx"] = jnp.zeros((cfg.d_model,), dtype)
+        p["xattn"] = L.init_attention(ks[1], cfg, dtype, cross=True)
+    if with_mlp and (cfg.d_ff or cfg.is_moe):
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        if cfg.is_moe:
+            p["moe"] = MOE.init_moe(ks[2], cfg, dtype,
+                                    n_virtual=moe_virtual or cfg.n_experts)
+        else:
+            p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+_KIND_INIT = {
+    "mamba": SSM.init_mamba,
+    "mlstm": SSM.init_mlstm,
+    "slstm": SSM.init_slstm,
+}
+
+
+def _stack_init(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg, key=None, dtype=None, *, moe_virtual: int = 0):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(ks[1], cfg.d_model, cfg.padded_vocab,
+                                      dtype, scale=0.02)
+    kinds = cfg.block_kinds()
+    if cfg.family == "encdec":
+        params["enc"] = _stack_init(
+            ks[2], cfg.enc_layers,
+            lambda k: _init_attn_layer(k, cfg, dtype))
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        params["dec"] = _stack_init(
+            ks[3], cfg.n_layers,
+            lambda k: _init_attn_layer(k, cfg, dtype, cross=True))
+        return params
+    if all(k in ("attn", "local") for k in kinds):
+        params["layers"] = _stack_init(
+            ks[2], cfg.n_layers,
+            lambda k: _init_attn_layer(k, cfg, dtype, moe_virtual=moe_virtual))
+        return params
+    if set(cfg.pattern) == {"mlstm", "slstm"}:          # xlstm
+        n_cyc = cfg.n_layers // len(cfg.pattern)
+        params["mlstm"] = _stack_init(
+            ks[2], n_cyc, lambda k: SSM.init_mlstm(k, cfg, dtype))
+        params["slstm"] = _stack_init(
+            ks[3], n_cyc, lambda k: SSM.init_slstm(k, cfg, dtype))
+        return params
+    if set(cfg.pattern) == {"mamba", "attn"}:           # zamba2 hybrid
+        n_cyc = cfg.n_layers // len(cfg.pattern)
+        per_cyc = sum(1 for k in cfg.pattern if k == "mamba")
+        params["mamba"] = _stack_init(
+            ks[2], n_cyc * per_cyc, lambda k: SSM.init_mamba(k, cfg, dtype))
+        params["attn_shared"] = _init_attn_layer(ks[3], cfg, dtype)
+        return params
+    raise NotImplementedError(cfg.pattern)
+
+
+def param_count_actual(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# position embeddings
+# ---------------------------------------------------------------------------
+
+def _cos_sin(cfg, positions):
+    """positions [B,S] (rope) or [3,B,S] (mrope) -> cos/sin [B,S,dh/2]."""
+    if cfg.rope_kind == "none":
+        return None
+    if cfg.rope_kind == "mrope":
+        return L.mrope_cos_sin(positions, cfg.d_head, cfg.rope_theta,
+                               cfg.mrope_sections)
+    return L.rope_cos_sin(positions, cfg.d_head, cfg.rope_theta)
+
+
+def default_positions(cfg, B, S, offset=0):
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None] + offset, (B, S))
+    if cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# training / prefill blocks (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_block(p, cfg, x, cs, window, rt: Runtime, *,
+                    causal=True, enc_out=None, enc_cs=None):
+    B, S, D = x.shape
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], cfg, h)
+    if cs is not None:
+        q = L.apply_rope(q, *cs)
+        k = L.apply_rope(k, *cs)
+    k = rt.constrain(k, "kv_full")
+    v = rt.constrain(v, "kv_full")
+    a = L.flash_attention(q, k, v, causal=causal, window=window)
+    x = x + L.dense(a.reshape(B, S, cfg.q_dim), p["attn"]["wo"])
+    aux = jnp.float32(0)
+    if "xattn" in p:
+        h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        qx = L.dense(h, p["xattn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        kx = L.dense(enc_out, p["xattn"]["wk"]).reshape(
+            B, -1, cfg.n_kv_heads, cfg.d_head)
+        vx = L.dense(enc_out, p["xattn"]["wv"]).reshape(
+            B, -1, cfg.n_kv_heads, cfg.d_head)
+        ax = L.flash_attention(qx, kx, vx, causal=False)
+        x = x + L.dense(ax.reshape(B, S, cfg.q_dim), p["xattn"]["wo"])
+    if "ln2" in p:
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            y, aux = rt.moe_apply(p["moe"], cfg, h2)
+        else:
+            y = L.mlp(p["mlp"], h2, cfg.act)
+        x = x + y
+    x = rt.constrain(x, "act")
+    return x, aux
+
+
+def _window_array(cfg) -> np.ndarray:
+    return np.asarray([cfg.sliding_window if k == "local" else 0
+                       for k in cfg.block_kinds()], np.int32)
+
+
+def _stack_forward_train(cfg, params, x, cs, rt: Runtime):
+    """Uniform attention stack via scan (dense/moe/local patterns)."""
+    windows = jnp.asarray(_window_array(cfg))
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, w = xs
+        h, a = _attn_mlp_block(lp, cfg, h, cs, w, rt)
+        return (h, aux + a), None
+
+    body = jax.checkpoint(body) if rt.remat else body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)),
+                               (params["layers"], windows))
+    return x, aux
+
+
+def _xlstm_forward_train(cfg, params, x, rt: Runtime):
+    def body(carry, lp):
+        h = carry
+        y, _ = SSM.mlstm_forward(lp["m"], cfg, h, chunk=rt.gla_chunk)
+        h = rt.constrain(h + y, "act")
+        y, _ = SSM.slstm_forward(lp["s"], cfg, h)
+        return rt.constrain(h + y, "act"), None
+
+    body = jax.checkpoint(body) if rt.remat else body
+    x, _ = jax.lax.scan(body, x, {"m": params["mlstm"], "s": params["slstm"]})
+    return x, jnp.float32(0)
+
+
+def _zamba_forward_train(cfg, params, x, cs, rt: Runtime):
+    n_cyc = cfg.n_layers // len(cfg.pattern)
+    per_cyc = sum(1 for k in cfg.pattern if k == "mamba")
+
+    def mamba_body(h, lp):
+        y, _ = SSM.mamba_forward(lp, cfg, h, chunk=rt.gla_chunk)
+        return rt.constrain(h + y, "act"), None
+
+    mamba_body = jax.checkpoint(mamba_body) if rt.remat else mamba_body
+    aux = jnp.float32(0)
+    for c in range(n_cyc):                       # unrolled: n_cyc == 2
+        sub = jax.tree.map(lambda a: a[c * per_cyc:(c + 1) * per_cyc],
+                           params["mamba"])
+        x, _ = jax.lax.scan(mamba_body, x, sub)
+        x, a = _attn_mlp_block(params["attn_shared"], cfg, x, cs, 0, rt)
+        aux = aux + a
+    return x, aux
+
+
+def encode(cfg, params, frames, rt: Runtime = DEFAULT_RT):
+    """Whisper encoder over stub frame embeddings [B, enc_seq, D]."""
+    pe = jnp.asarray(L.sinusoidal_positions(frames.shape[1], cfg.d_model))
+    x = (frames + pe[None].astype(frames.dtype))
+
+    def body(h, lp):
+        h, _ = _attn_mlp_block(lp, cfg, h, None, 0, rt, causal=False)
+        return h, None
+
+    body = jax.checkpoint(body) if rt.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_hidden(cfg, params, tokens, *, positions=None, extra_embeds=None,
+                   frames=None, rt: Runtime = DEFAULT_RT):
+    """Full-sequence forward -> (final hidden [B,S,D], moe aux)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if extra_embeds is not None:                 # VLM stub modality fusion
+        x = x + extra_embeds.astype(x.dtype)
+    if cfg.rope_kind == "none" and cfg.family == "encdec":
+        pe = jnp.asarray(L.sinusoidal_positions(S, cfg.d_model))
+        x = x + pe[None].astype(x.dtype)
+    x = rt.constrain(x, "act")
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    cs = _cos_sin(cfg, positions)
+
+    if cfg.family == "encdec":
+        enc_out = encode(cfg, params, frames, rt)
+
+        def body(carry, lp):
+            h, aux = carry
+            h, a = _attn_mlp_block(lp, cfg, h, cs, 0, rt, enc_out=enc_out)
+            return (h, aux + a), None
+
+        body = jax.checkpoint(body) if rt.remat else body
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), params["dec"])
+    elif "layers" in params:
+        x, aux = _stack_forward_train(cfg, params, x, cs, rt)
+    elif "mlstm" in params:
+        x, aux = _xlstm_forward_train(cfg, params, x, rt)
+    else:
+        x, aux = _zamba_forward_train(cfg, params, x, cs, rt)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def forward(cfg, params, tokens, *, positions=None, extra_embeds=None,
+            frames=None, rt: Runtime = DEFAULT_RT):
+    """Full-sequence forward -> (fp32 logits [B, S, padded_vocab], aux)."""
+    x, aux = forward_hidden(cfg, params, tokens, positions=positions,
+                            extra_embeds=extra_embeds, frames=frames, rt=rt)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = L.lm_head(x, w, transpose=cfg.tie_embeddings)
+    return rt.constrain(logits, "logits"), aux
+
+
+def train_loss(cfg, params, batch, rt: Runtime = DEFAULT_RT,
+               *, loss_chunk: int = 1024):
+    """batch: tokens/targets [B,S], mask [B,S]; returns (loss, metrics).
+
+    Cross-entropy is computed in sequence chunks (remat'd) so [B,S,V] logits
+    never materialize — at 4k x 256k-vocab the full fp32 logits would be
+    ~4 GB/device, dominating the training memory term.
+    """
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"],
+                                 positions=batch.get("positions"),
+                                 extra_embeds=batch.get("extra_embeds"),
+                                 frames=batch.get("frames"), rt=rt)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    tgt = batch["targets"]
+    mask = batch["mask"].astype(jnp.float32)
+    B, S = tgt.shape
+    c = min(loss_chunk, S)
+    n_chunks = S // c if S % c == 0 else 1
+    if S % c != 0:
+        c = S
+
+    @jax.checkpoint
+    def chunk_nll(h_c, t_c, m_c):
+        logits = L.lm_head(h_c, w, transpose=cfg.tie_embeddings)
+        logits = rt.constrain(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        return ((lse - picked) * m_c).sum()
+
+    def body(carry, xs):
+        h_c, t_c, m_c = xs
+        return carry + chunk_nll(h_c, t_c, m_c), None
+
+    hs = hidden.reshape(B, n_chunks, c, -1).transpose(1, 0, 2, 3)
+    ts = tgt.reshape(B, n_chunks, c).transpose(1, 0, 2)
+    ms = mask.reshape(B, n_chunks, c).transpose(1, 0, 2)
+    nll, _ = jax.lax.scan(body, jnp.float32(0), (hs, ts, ms))
+    loss = nll / jnp.maximum(mask.sum(), 1.0)
+    if cfg.is_moe:
+        loss = loss + 0.01 * aux / max(1, cfg.n_layers)
+    return loss, {"nll": loss, "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, paged KV via ITPP)
+# ---------------------------------------------------------------------------
+
+def _attn_block_decode(p, cfg, x, cs, window, pool_k, pool_v, bt, ctx,
+                       npage, noff, rt: Runtime, cross_kv=None):
+    """x [B, D] one token. Returns (x, pool_k, pool_v)."""
+    B, D = x.shape
+    h = L.rms_norm(x[:, None, :], p["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], cfg, h)          # [B,1,H,dh]
+    if cs is not None:
+        q = L.apply_rope(q, *cs)
+        k = L.apply_rope(k, *cs)
+    a, pool_k, pool_v = rt.itpp_apply(
+        q[:, 0], k[:, 0], v[:, 0], pool_k, pool_v, bt, ctx, npage, noff, window)
+    x = x + L.dense(a.reshape(B, cfg.q_dim), p["attn"]["wo"])
+    if cross_kv is not None:
+        h = L.rms_norm(x[:, None, :], p["lnx"], cfg.norm_eps)
+        qx = L.dense(h, p["xattn"]["wq"]).reshape(B, cfg.n_heads, cfg.d_head)
+        kx, vx = cross_kv
+        ax = L.decode_attention_ref(
+            qx, kx, vx, jnp.full((B,), kx.shape[1], jnp.int32))
+        x = x + L.dense(ax.reshape(B, cfg.q_dim), p["xattn"]["wo"])
+    if "ln2" in p:
+        h2 = L.rms_norm(x[:, None, :], p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            y, _ = rt.moe_apply(p["moe"], cfg, h2)
+        else:
+            y = L.mlp(p["mlp"], h2, cfg.act)
+        x = x + y[:, 0]
+    return rt.constrain(x, "act_decode"), pool_k, pool_v
+
+
+def init_decode_state(cfg, pool_spec, batch: int, *, dtype=None):
+    """Decode-side caches: paged pools for attention layers + recurrent
+    states for ssm layers (+ cross-attn KV for enc-dec)."""
+    from repro.core.paged_kv import init_pool
+    state: dict[str, Any] = {}
+    kinds = cfg.block_kinds()
+    if any(k in ("attn", "local") for k in kinds) or cfg.family == "encdec":
+        state["pool"] = init_pool(pool_spec)
+    if "mamba" in kinds:
+        n_m = sum(1 for k in kinds if k == "mamba")
+        state["mamba"] = jax.vmap(
+            lambda _: SSM.mamba_init_state(cfg, batch))(jnp.arange(n_m))
+    if "mlstm" in kinds:
+        n = cfg.n_layers // 2
+        state["mlstm"] = jax.vmap(
+            lambda _: SSM.mlstm_init_state(cfg, batch))(jnp.arange(n))
+        state["slstm"] = jax.vmap(
+            lambda _: SSM.slstm_init_state(cfg, batch))(jnp.arange(n))
+    if cfg.family == "encdec":
+        state["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head),
+            jnp.dtype(dtype or cfg.dtype))
+        state["cross_v"] = jnp.zeros_like(state["cross_k"])
+    return state
+
+
+def make_cross_kv(cfg, params, enc_out):
+    """Precompute whisper cross-attention KV [L, B, enc, KVH, dh]."""
+    def one(lp):
+        kx = L.dense(enc_out, lp["xattn"]["wk"]).reshape(
+            enc_out.shape[0], -1, cfg.n_kv_heads, cfg.d_head)
+        vx = L.dense(enc_out, lp["xattn"]["wv"]).reshape(
+            enc_out.shape[0], -1, cfg.n_kv_heads, cfg.d_head)
+        return kx, vx
+    return jax.vmap(one)(params["dec"])
+
+
+def decode_step(cfg, params, state, tokens, bt, ctx, npage, noff, *,
+                positions=None, rt: Runtime = DEFAULT_RT):
+    """One decode step for the whole batch.
+
+    tokens [B]; bt [B, maxp]; ctx [B] (INCLUDING the new token);
+    npage/noff [B] write target for the new token's KV.
+    Returns (fp32 logits [B, V], new_state).
+    """
+    B = tokens.shape[0]
+    x = L.embed(params["embed"], tokens)                # [B, D]
+    if cfg.rope_kind == "none" and cfg.family == "encdec":
+        x = x + L.sinusoidal_at(ctx - 1, cfg.d_model).astype(x.dtype)
+    if positions is None:
+        pos = (ctx - 1).astype(jnp.int32)[:, None]      # [B,1]
+        if cfg.rope_kind == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, B, 1))
+        positions = pos
+    cs = _cos_sin(cfg, positions)
+    x = rt.constrain(x, "act_decode")
+    kinds = cfg.block_kinds()
+    state = dict(state)
+
+    if cfg.family == "encdec" or all(k in ("attn", "local") for k in kinds):
+        windows = jnp.asarray(_window_array(cfg))
+        pool = state["pool"]
+        stack = params["dec"] if cfg.family == "encdec" else params["layers"]
+        has_cross = cfg.family == "encdec"
+
+        # pool layers ride as scan xs/ys (per-layer slices stream through the
+        # loop) rather than a carry + dynamic-update-slice: the carry pattern
+        # made XLA copy the WHOLE pool twice per layer — 88% of decode HBM
+        # traffic for gemma3-27b (EXPERIMENTS.md §Perf H1).
+        def body(h, xs):
+            if has_cross:
+                lp, w, pkl, pvl, ck, cv = xs
+                cross = (ck, cv)
+            else:
+                lp, w, pkl, pvl = xs
+                cross = None
+            h, pkl, pvl = _attn_block_decode(lp, cfg, h, cs, w, pkl, pvl,
+                                             bt, ctx, npage, noff, rt,
+                                             cross_kv=cross)
+            return h, (pkl, pvl)
+
+        xs = ((stack, windows, pool["k"], pool["v"],
+               state["cross_k"], state["cross_v"])
+              if has_cross else (stack, windows, pool["k"], pool["v"]))
+        x, (pk, pv) = jax.lax.scan(body, x, xs)
+        state["pool"] = {"k": pk, "v": pv}
+    elif "mlstm" in params:
+        def body(carry, xs):
+            h = carry
+            lp_m, lp_s, st_m, st_s = xs
+            y, st_m = SSM.mlstm_step(lp_m, cfg, h, st_m)
+            h = h + y
+            y, st_s = SSM.slstm_step(lp_s, cfg, h, st_s)
+            return h + y, (st_m, st_s)
+
+        (x), (new_m, new_s) = jax.lax.scan(
+            body, x, (params["mlstm"], params["slstm"],
+                      state["mlstm"], state["slstm"]))
+        state["mlstm"], state["slstm"] = new_m, new_s
+    else:                                               # zamba hybrid
+        n_cyc = cfg.n_layers // len(cfg.pattern)
+        per_cyc = sum(1 for k in cfg.pattern if k == "mamba")
+        pool = state["pool"]
+        pk, pv = pool["k"], pool["v"]
+        new_mamba = []
+
+        def mbody(h, xs):
+            lp, st = xs
+            y, st = SSM.mamba_step(lp, cfg, h, st)
+            return h + y, st
+
+        for c in range(n_cyc):
+            sl = lambda a: a[c * per_cyc:(c + 1) * per_cyc]
+            x, st_out = jax.lax.scan(
+                mbody, x, (jax.tree.map(sl, params["mamba"]),
+                           jax.tree.map(sl, state["mamba"])))
+            new_mamba.append(st_out)
+            pkl, pvl = pk[c], pv[c]
+            x, pkl, pvl = _attn_block_decode(
+                params["attn_shared"], cfg, x, cs, 0, pkl, pvl,
+                bt, ctx, npage, noff, rt)
+            pk = pk.at[c].set(pkl)
+            pv = pv.at[c].set(pvl)
+        state["pool"] = {"k": pk, "v": pv}
+        state["mamba"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, 0), *new_mamba)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = L.lm_head(x, w, transpose=cfg.tie_embeddings)
+    return rt.constrain(logits, "logits_decode"), state
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also fills the decode caches
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, params, state, tokens, bt, *, positions=None,
+            extra_embeds=None, frames=None, rt: Runtime = DEFAULT_RT):
+    """Run the prompt through the model, writing KV pages / recurrent states.
+
+    Returns (fp32 logits of the LAST position [B, V], new_state). Assumes all
+    requests in the batch share prompt length S (the serving engine pads);
+    per-request lengths come in at decode via ctx.
+    """
+    from repro.core.paged_kv import write_prefill
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if extra_embeds is not None:
+        x = x + extra_embeds.astype(x.dtype)
+    if cfg.rope_kind == "none" and cfg.family == "encdec":
+        pe = jnp.asarray(L.sinusoidal_positions(S, cfg.d_model))
+        x = x + pe[None].astype(x.dtype)
+    x = rt.constrain(x, "act")
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    cs = _cos_sin(cfg, positions)
+    kinds = cfg.block_kinds()
+    state = dict(state)
+    aux_unused = jnp.float32(0)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(cfg, params, frames, rt)
+        ck, cv = make_cross_kv(cfg, params, enc_out)
+        state["cross_k"], state["cross_v"] = ck, cv
+
+    def attn_prefill_block(lp, h, w, pkl, pvl, cross=None):
+        hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], cfg, hn)
+        if cs is not None:
+            q = L.apply_rope(q, *cs)
+            k = L.apply_rope(k, *cs)
+        if rt.write_pool is not None:
+            pkl, pvl = rt.write_pool(pkl, pvl, k, v, bt)
+        elif rt.ring_width:
+            # ring pools recycle slots: tokens older than the ring are
+            # overwritten before they could ever be read — write only the
+            # final window (7x less scatter volume for mixtral prefill_32k;
+            # EXPERIMENTS.md §Perf P4)
+            page = pkl.shape[1]
+            span = min(rt.ring_width * page, S)
+            pkl, pvl = write_prefill(pkl, pvl, k[:, S - span:],
+                                     v[:, S - span:], bt,
+                                     ctx_start=S - span,
+                                     ring_width=rt.ring_width)
+        else:
+            pkl, pvl = write_prefill(pkl, pvl, k, v, bt)
+        kf = rt.constrain(k, "kv_full")
+        vf = rt.constrain(v, "kv_full")
+        a = L.flash_attention(q, kf, vf, causal=True, window=w)
+        h = h + L.dense(a.reshape(B, S, cfg.q_dim), lp["attn"]["wo"])
+        if cross is not None:
+            hx = L.rms_norm(h, lp["lnx"], cfg.norm_eps)
+            qx = L.dense(hx, lp["xattn"]["wq"]).reshape(
+                B, S, cfg.n_heads, cfg.d_head)
+            ax = L.flash_attention(qx, cross[0], cross[1], causal=False)
+            h = h + L.dense(ax.reshape(B, S, cfg.q_dim), lp["xattn"]["wo"])
+        if "ln2" in lp:
+            h2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            y = (rt.moe_apply(lp["moe"], cfg, h2)[0] if "moe" in lp
+                 else L.mlp(lp["mlp"], h2, cfg.act))
+            h = h + y
+        return rt.constrain(h, "act"), pkl, pvl
+
+    if cfg.family == "encdec" or all(k in ("attn", "local") for k in kinds):
+        windows = jnp.asarray(_window_array(cfg))
+        pool = state["pool"]
+        stack = params["dec"] if cfg.family == "encdec" else params["layers"]
+        has_cross = cfg.family == "encdec"
+
+        def body(carry, xs):
+            h, pk, pv = carry
+            if has_cross:
+                i, lp, w, ckl, cvl = xs
+                cross = (ckl, cvl)
+            else:
+                i, lp, w = xs
+                cross = None
+            pkl = jax.lax.dynamic_index_in_dim(pk, i, 0, keepdims=False)
+            pvl = jax.lax.dynamic_index_in_dim(pv, i, 0, keepdims=False)
+            h, pkl, pvl = attn_prefill_block(lp, h, w, pkl, pvl, cross)
+            pk = jax.lax.dynamic_update_index_in_dim(pk, pkl, i, 0)
+            pv = jax.lax.dynamic_update_index_in_dim(pv, pvl, i, 0)
+            return (h, pk, pv), None
+
+        body = jax.checkpoint(body) if rt.remat else body
+        idx = jnp.arange(len(kinds))
+        xs = ((idx, stack, windows, state["cross_k"], state["cross_v"])
+              if has_cross else (idx, stack, windows))
+        (x, pk, pv), _ = jax.lax.scan(body, (x, pool["k"], pool["v"]), xs)
+        state["pool"] = {"k": pk, "v": pv}
+    elif "mlstm" in params:
+        def body(carry, xs):
+            h = carry
+            lp_m, lp_s, st_m, st_s = xs
+            y, st_m = SSM.mlstm_forward(lp_m, cfg, h, state=st_m,
+                                        chunk=rt.gla_chunk)
+            h = h + y
+            y, st_s = SSM.slstm_forward(lp_s, cfg, h, state=st_s)
+            return h + y, (st_m, st_s)
+
+        body = jax.checkpoint(body) if rt.remat else body
+        x, (new_m, new_s) = jax.lax.scan(
+            body, x, (params["mlstm"], params["slstm"],
+                      state["mlstm"], state["slstm"]))
+        state["mlstm"], state["slstm"] = new_m, new_s
+    else:                                               # zamba
+        n_cyc = cfg.n_layers // len(cfg.pattern)
+        per_cyc = sum(1 for k in cfg.pattern if k == "mamba")
+        pool = state["pool"]
+        pk, pv = pool["k"], pool["v"]
+        new_mamba = []
+
+        def mbody(h, xs):
+            lp, st = xs
+            y, st = SSM.mamba_forward(lp, cfg, h, state=st, chunk=rt.gla_chunk)
+            return h + y, st
+
+        mbody = jax.checkpoint(mbody) if rt.remat else mbody
+        for c in range(n_cyc):
+            sl = lambda a: a[c * per_cyc:(c + 1) * per_cyc]
+            x, st_out = jax.lax.scan(
+                mbody, x, (jax.tree.map(sl, params["mamba"]),
+                           jax.tree.map(sl, state["mamba"])))
+            new_mamba.append(st_out)
+            x, pkl, pvl = attn_prefill_block(
+                params["attn_shared"], x, 0, pk[c], pv[c])
+            pk = pk.at[c].set(pkl)
+            pv = pv.at[c].set(pvl)
+        state["pool"] = {"k": pk, "v": pv}
+        state["mamba"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, 0), *new_mamba)
+
+    x = L.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = L.lm_head(x, w, transpose=cfg.tie_embeddings)
+    return logits, state

@@ -1,0 +1,368 @@
+"""State-space / recurrent blocks: Mamba2 and xLSTM (mLSTM + sLSTM).
+
+Both Mamba2 and mLSTM are members of the gated-linear-attention family
+(state h_t = a_t * h_{t-1} + g_t * k_t v_t^T), so training/prefill use one
+shared **chunkwise-parallel** engine (`chunked_gla`): quadratic attention-like
+math inside a chunk, recurrent state handoff across chunks — the TPU-friendly
+formulation (MXU matmuls instead of a length-S sequential scan). Decoding uses
+the exact stabilized recurrences. sLSTM has memory mixing and is sequential by
+construction (xLSTM §2.2); it runs as a `lax.scan` over time.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense, init_dense, rms_norm, NEG_INF
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# shared chunkwise gated linear attention
+# ---------------------------------------------------------------------------
+
+def chunked_gla(q, k, v, log_a, log_g, *, chunk: int = 128,
+                normalize: bool = False, state=None):
+    """Chunkwise-parallel gated linear attention.
+
+    q,k [B,S,H,dk]; v [B,S,H,dv]; log_a [B,S,H] log-decay applied to the
+    previous state at each step; log_g [B,S,H] log input gain.
+    h_t = exp(log_a_t) h_{t-1} + exp(log_g_t) k_t v_t^T;  y_t = h_t^T q_t.
+
+    ``normalize=True`` adds the mLSTM normalizer/stabilizer (n, m) so gains
+    may be unbounded (exp input gate). Returns (y [B,S,H,dv], state) where
+    state = (C [B,H,dk,dv], n [B,H,dk], m [B,H]).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    def r(x, width=None):
+        shp = (b, n_chunks, chunk, h) + ((width,) if width else ())
+        return x.reshape(shp)
+
+    qc, kc, vc = r(q, dk).astype(F32), r(k, dk).astype(F32), r(v, dv).astype(F32)
+    la, lg = r(log_a).astype(F32), r(log_g).astype(F32)
+    bcum = jnp.cumsum(la, axis=2)                    # [B,K,c,H] inclusive
+    btot = bcum[:, :, -1]                            # [B,K,H]
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dk, dv), F32)
+        n0 = jnp.zeros((b, h, dk), F32)
+        m0 = jnp.full((b, h), NEG_INF if normalize else 0.0, F32)
+    else:
+        C0, n0, m0 = state
+        C0, n0, m0 = C0.astype(F32), n0.astype(F32), m0.astype(F32)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]            # [c,c] j<=i
+
+    def step(carry, xs):
+        C, n, m = carry
+        qb, kb, vb, bc, bt, lgb = xs                 # [B,c,H,*] / [B,c,H] / [B,H]
+        # log weight of source j at query i: bc_i - bc_j + lg_j
+        wlog = (bc[:, :, None, :] - bc[:, None, :, :] + lgb[:, None, :, :])
+        wlog = jnp.where(causal[None, :, :, None], wlog, NEG_INF)   # [B,i,j,H]
+        if normalize:
+            m_intra = wlog.max(axis=2)                              # [B,c,H]
+            m_i = jnp.maximum(m[:, None, :] + bc, m_intra)
+            w_inter = jnp.exp(m[:, None, :] + bc - m_i)             # [B,c,H]
+            wmat = jnp.exp(wlog - m_i[:, :, None, :])               # [B,i,j,H]
+        else:
+            m_i = jnp.zeros_like(bc)
+            w_inter = jnp.exp(bc)
+            wmat = jnp.exp(jnp.clip(wlog, NEG_INF, 60.0))
+        scores = jnp.einsum("bihd,bjhd->bijh", qb, kb,
+                            preferred_element_type=F32) * wmat
+        y_intra = jnp.einsum("bijh,bjhv->bihv", scores, vb,
+                             preferred_element_type=F32)
+        y_inter = jnp.einsum("bihd,bhdv->bihv", qb, C,
+                             preferred_element_type=F32) * w_inter[..., None]
+        y = y_intra + y_inter
+        if normalize:
+            # n_i = sum_j w_ij k_j (+ carried n); den_i = q_i . n_i which is
+            # exactly sum_j scores_ij + w_inter * (q_i . n_carried)
+            den = scores.sum(axis=2) + jnp.einsum(
+                "bihd,bhd->bih", qb, n, preferred_element_type=F32) * w_inter
+            y = y / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # ---- state handoff ----
+        slog = bt[:, None, :] - bc + lgb                            # [B,c,H]
+        if normalize:
+            m_new = jnp.maximum(m + bt, slog.max(axis=1))
+            sc = jnp.exp(slog - m_new[:, None, :])
+            carry_scale = jnp.exp(m + bt - m_new)
+        else:
+            m_new = m
+            sc = jnp.exp(jnp.clip(slog, NEG_INF, 60.0))
+            carry_scale = jnp.exp(bt)
+        kv = jnp.einsum("bjhd,bjhv->bhdv", kb * sc[..., None], vb,
+                        preferred_element_type=F32)
+        C_new = C * carry_scale[..., None, None] + kv
+        n_new = n * carry_scale[..., None] + jnp.einsum(
+            "bjhd->bhd", kb * sc[..., None])
+        return (C_new, n_new, m_new), y
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), bcum.transpose(1, 0, 2, 3),
+          btot.transpose(1, 0, 2), lg.transpose(1, 0, 2, 3))
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    return y, (C, n, m)
+
+
+def gla_step(q, k, v, log_a, log_g, state, *, normalize: bool = False):
+    """Exact single-step recurrence. q,k [B,H,dk]; v [B,H,dv];
+    log_a, log_g [B,H]; state as in chunked_gla."""
+    C, n, m = (s.astype(F32) for s in state)
+    q, k, v = q.astype(F32), k.astype(F32), v.astype(F32)
+    la, lg = log_a.astype(F32), log_g.astype(F32)
+    if normalize:
+        m_new = jnp.maximum(la + m, lg)
+        fa = jnp.exp(la + m - m_new)
+        gi = jnp.exp(lg - m_new)
+    else:
+        m_new = m
+        fa = jnp.exp(la)
+        gi = jnp.exp(jnp.clip(lg, NEG_INF, 60.0))
+    C_new = C * fa[..., None, None] + gi[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = n * fa[..., None] + gi[..., None] * k
+    y = jnp.einsum("bhd,bhdv->bhv", q, C_new, preferred_element_type=F32)
+    if normalize:
+        den = jnp.einsum("bhd,bhd->bh", q, n_new, preferred_element_type=F32)
+        y = y / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return y, (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg, dtype):
+    # separate projections (not one fused in_proj) so each is cleanly
+    # column-shardable for TP (DESIGN.md §4)
+    D, di, N, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * N
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "wz": init_dense(ks[0], D, di, dtype),
+        "wx": init_dense(ks[1], D, di, dtype),
+        "wbc": init_dense(ks[2], D, 2 * N, dtype),
+        "wdt": init_dense(ks[3], D, nh, dtype),
+        "conv_w": (jax.random.normal(ks[4], (cfg.ssm_conv, conv_ch), F32)
+                   * (1.0 / math.sqrt(cfg.ssm_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=F32)),
+        "D": jnp.ones((nh,), F32),
+        "dt_bias": jnp.full((nh,), -4.6, F32),   # softplus^-1(~0.01)
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": init_dense(ks[5], di, D, dtype,
+                               scale=1.0 / math.sqrt(di * 2 * cfg.n_layers)),
+    }
+
+
+def _mamba_proj(p, cfg, x):
+    """Shared in-proj/split. x [B,S,D] -> z, xbc_raw, dt_raw."""
+    z = dense(x, p["wz"])
+    xbc = jnp.concatenate([dense(x, p["wx"]), dense(x, p["wbc"])], axis=-1)
+    dt_raw = dense(x, p["wdt"])
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv. xbc [B,S,C]; w [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :].astype(F32)
+              for i in range(k))
+    return jax.nn.silu(out + b.astype(F32)[None, None, :]).astype(xbc.dtype)
+
+
+def _mamba_ssm_inputs(p, cfg, xbc, dt_raw):
+    di, N, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    xh = xbc[..., :di].reshape(*xbc.shape[:-1], nh, P)
+    Bm = xbc[..., di:di + N]
+    Cm = xbc[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"])
+    log_a = -jnp.exp(p["A_log"]) * dt                # [.., nh]
+    return xh, Bm, Cm, dt, log_a
+
+
+def mamba_forward(p, cfg, x, state=None, *, chunk: int = 128):
+    """x [B,S,D] -> (y [B,S,D], state). state=(conv_tail [B,K-1,C], ssm (C,n,m))."""
+    Bsz, S, D = x.shape
+    nh, N = cfg.ssm_n_heads, cfg.ssm_state
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xbc, dt_raw = _mamba_proj(p, cfg, xin)
+    if state is not None:
+        conv_tail = state["conv"]
+        xbc_full = jnp.concatenate([conv_tail.astype(xbc.dtype), xbc], axis=1)
+        xbc_act = _causal_conv(xbc_full, p["conv_w"], p["conv_b"])[:, conv_tail.shape[1]:]
+    else:
+        xbc_act = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    new_conv_tail = (jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+                     if state is not None else xbc)[:, -(cfg.ssm_conv - 1):]
+    xh, Bm, Cm, dt, log_a = _mamba_ssm_inputs(p, cfg, xbc_act, dt_raw)
+    q = jnp.broadcast_to(Cm[:, :, None, :], (Bsz, S, nh, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (Bsz, S, nh, N))
+    ssm_state = state["ssm"] if state is not None else None
+    y, ssm_state = chunked_gla(q, k, xh, log_a, jnp.log(dt + 1e-20),
+                               chunk=chunk, normalize=False, state=ssm_state)
+    y = y + xh.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])
+    return out, {"conv": new_conv_tail, "ssm": ssm_state}
+
+
+def mamba_step(p, cfg, x, state):
+    """x [B,D] single token. state as returned by mamba_forward."""
+    y, new_state = mamba_forward(p, cfg, x[:, None, :], state, chunk=1)
+    return y[:, 0], new_state
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32):
+    nh, N, P = cfg.ssm_n_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": (jnp.zeros((batch, nh, N, P), F32),
+                jnp.zeros((batch, nh, N), F32),
+                jnp.zeros((batch, nh), F32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype):
+    D, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "wu": init_dense(ks[0], D, di, dtype),
+        "wg": init_dense(ks[7], D, di, dtype),
+        "wq": init_dense(ks[1], di, di, dtype),
+        "wk": init_dense(ks[2], di, di, dtype),
+        "wv": init_dense(ks[3], di, di, dtype),
+        "wi": init_dense(ks[4], di, H, dtype, scale=0.01),
+        "bi": jnp.zeros((H,), F32),
+        "wf": init_dense(ks[5], di, H, dtype, scale=0.01),
+        "bf": jnp.full((H,), 3.0, F32),          # open forget gates at init
+        "norm": jnp.zeros((di,), dtype),
+        "down": init_dense(ks[6], di, D, dtype,
+                           scale=1.0 / math.sqrt(di * 2 * cfg.n_layers)),
+    }
+
+
+def _mlstm_qkvg(p, cfg, xin):
+    di, H = cfg.d_inner, cfg.n_heads
+    dh = di // H
+    u, g = dense(xin, p["wu"]), dense(xin, p["wg"])
+    shp = (*u.shape[:-1], H, dh)
+    q = dense(u, p["wq"]).reshape(shp)
+    k = dense(u, p["wk"]).reshape(shp) / math.sqrt(dh)
+    v = dense(u, p["wv"]).reshape(shp)
+    log_g = dense(u, p["wi"]).astype(F32) + p["bi"]                  # input gate preact
+    log_a = -jax.nn.softplus(-(dense(u, p["wf"]).astype(F32) + p["bf"]))  # log sigmoid
+    return q, k, v, log_a, log_g, g
+
+
+def mlstm_forward(p, cfg, x, state=None, *, chunk: int = 128):
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k, v, log_a, log_g, g = _mlstm_qkvg(p, cfg, xin)
+    y, new_state = chunked_gla(q, k, v, log_a, log_g, chunk=chunk,
+                               normalize=True, state=state)
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(g.astype(F32)).astype(x.dtype)
+    return dense(y, p["down"]), new_state
+
+
+def mlstm_step(p, cfg, x, state):
+    y, new_state = mlstm_forward(p, cfg, x[:, None, :], state, chunk=1)
+    return y[:, 0], new_state
+
+
+def mlstm_init_state(cfg, batch: int):
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    return (jnp.zeros((batch, H, dh, dh), F32),
+            jnp.zeros((batch, H, dh), F32),
+            jnp.full((batch, H), NEG_INF, F32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — sequential by construction (memory mixing)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "w": init_dense(ks[0], D, 4 * D, dtype),
+        "b": jnp.concatenate([jnp.zeros((D,), F32),          # i
+                              jnp.full((D,), 3.0, F32),      # f
+                              jnp.zeros((2 * D,), F32)]),    # z, o
+        "r": (jax.random.normal(ks[1], (4, H, dh, dh), F32)
+              / math.sqrt(dh)).astype(dtype),
+        "norm": jnp.zeros((D,), dtype),
+        "proj": init_dense(ks[2], D, D, dtype,
+                           scale=1.0 / math.sqrt(D * 2 * cfg.n_layers)),
+    }
+
+
+def _slstm_cell(p, cfg, x_pre, state):
+    """x_pre [B,4D] (input preactivations). state=(c,n,m,h) each [B,D]."""
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    c, n, m, hprev = state
+    hh = hprev.reshape(-1, H, dh)
+    rec = jnp.stack([
+        jnp.einsum("bhd,hde->bhe", hh, p["r"][i].astype(F32)).reshape(-1, D)
+        for i in range(4)], axis=-2)                        # [B,4,D]
+    pre = x_pre.reshape(-1, 4, D).astype(F32) + rec + p["b"].reshape(4, D)
+    it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    log_f = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(zt)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * (c_new / jnp.maximum(n_new, 1e-6))
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(p, cfg, x, state=None):
+    B, S, D = x.shape
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    x_pre = dense(xin, p["w"])                               # [B,S,4D]
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    def step(carry, xp):
+        return _slstm_cell(p, cfg, xp, carry)
+    state, hs = jax.lax.scan(step, state, x_pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)                # [B,S,D]
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    return dense(h, p["proj"]), state
+
+
+def slstm_step(p, cfg, x, state):
+    y, state = slstm_forward(p, cfg, x[:, None, :], state)
+    return y[:, 0], state
+
+
+def slstm_init_state(cfg, batch: int):
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), F32)
+    return (z, z, jnp.full((batch, D), NEG_INF, F32), z)

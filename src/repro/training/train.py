@@ -1,0 +1,59 @@
+"""Training step: loss + grads (+ microbatch accumulation) + AdamW.
+
+The step function is pure and jit/AOT-lowerable: ``train_step(params,
+opt_state, batch) -> (params, opt_state, metrics)``. Distribution comes from
+the Runtime injected by the sharding plan; gradient accumulation splits the
+global batch into ``microbatches`` sequential chunks (activation-memory
+control — with PP the same chunks become the pipeline's microbatches).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MDL
+from repro.training import optimizer as OPT
+
+
+def make_loss_fn(cfg, rt):
+    def loss_fn(params, batch):
+        return MDL.train_loss(cfg, params, batch, rt=rt)
+    return loss_fn
+
+
+def make_train_step(cfg, rt, opt_cfg: OPT.AdamWConfig, *, microbatches: int = 1):
+    loss_fn = make_loss_fn(cfg, rt)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(key, x):
+                if key == "positions" and x.ndim == 3:   # mrope [3, B, S]
+                    return x.reshape(3, microbatches, -1, x.shape[-1]) \
+                            .transpose(1, 0, 2, 3)
+                return x.reshape(microbatches, -1, *x.shape[1:])
+
+            mb = {k: split(k, v) for k, v in batch.items()}
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+
+            def body(carry, mbatch):
+                acc, loss_acc = carry
+                (loss, _), grads = grad_fn(params, mbatch)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                   acc, grads)
+                return (acc, loss_acc + loss), None
+
+            (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"nll": loss, "tokens": jnp.float32(0)}
+        params, opt_state, om = OPT.apply(opt_cfg, params, grads, opt_state)
+        metrics = {**metrics, **om, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,12 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here by design — unit/smoke
+tests see 1 device; multi-device shard_map tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves (see test_distributed.py).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,85 @@
+"""Property tests for the DPA allocator (Va2Pa bookkeeping invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import PageAllocator
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_no_double_allocation_and_full_release(data):
+    n_shards = data.draw(st.sampled_from([1, 2, 4, 8]))
+    pages_per_shard = data.draw(st.integers(2, 8))
+    n_pages = n_shards * pages_per_shard
+    page_size = data.draw(st.sampled_from([2, 4, 16]))
+    alloc = PageAllocator(n_pages, n_shards, page_size)
+    live: dict[int, set[int]] = {}
+    next_req = 0
+    for _ in range(data.draw(st.integers(1, 40))):
+        action = data.draw(st.sampled_from(["admit", "grow", "free"]))
+        if action == "admit" and alloc.free_page_count > 0:
+            toks = data.draw(st.integers(1, alloc.free_page_count * page_size))
+            pages = alloc.admit(next_req, toks)
+            live[next_req] = set(pages)
+            next_req += 1
+        elif action == "grow" and live:
+            r = data.draw(st.sampled_from(sorted(live)))
+            have = len(live[r])
+            want = data.draw(st.integers(have * page_size,
+                                         have * page_size + page_size))
+            try:
+                new = alloc.ensure(r, want)
+            except MemoryError:
+                continue
+            live[r] |= set(new)
+        elif action == "free" and live:
+            r = data.draw(st.sampled_from(sorted(live)))
+            alloc.free(r)
+            del live[r]
+        # invariant: no page owned twice
+        seen: set[int] = set()
+        for pages in live.values():
+            assert not (pages & seen)
+            seen |= pages
+        assert alloc.pages_in_use == len(seen)
+    for r in sorted(live):
+        alloc.free(r)
+    assert alloc.pages_in_use == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_reqs=st.integers(1, 6), toks=st.integers(1, 64))
+def test_striped_balance(n_reqs, toks):
+    """ITPP balance: striped allocation keeps per-shard usage within 1 page
+    per request of each other (the paper's channel-balance claim)."""
+    alloc = PageAllocator(256, 8, 4, policy="striped")
+    for r in range(n_reqs):
+        alloc.admit(r, toks)
+    bal = alloc.shard_balance()
+    assert bal.max() - bal.min() <= n_reqs
+
+
+def test_row_affinity():
+    alloc = PageAllocator(64, 8, 4, policy="row_affine", n_rows=4)
+    alloc.admit(0, 24, row=2)
+    for p in alloc._tables[0]:
+        assert alloc.shard_of(p) in (4, 5)       # row 2 owns shards 4,5
+    with pytest.raises(AssertionError):
+        alloc.can_admit(8, None)
+
+
+def test_static_mode_reserves_max_and_rejects_overflow():
+    alloc = PageAllocator(32, 1, 4, static_max_pages=8)
+    alloc.admit(0, 4)                            # 1 page of actual need
+    assert alloc.pages_in_use == 8               # but reserves 8 (baseline)
+    assert alloc.ensure(0, 32) == []             # within reservation
+    with pytest.raises(MemoryError):
+        alloc.ensure(0, 33)                      # beyond static reservation
+
+
+def test_ring_mode_caps_pages():
+    alloc = PageAllocator(32, 1, 4, ring_pages=3)
+    alloc.admit(0, 4)
+    alloc.ensure(0, 1000)                        # unbounded tokens...
+    assert len(alloc._tables[0]) == 3            # ...bounded pages (SWA)

@@ -1,0 +1,61 @@
+"""Fault-tolerance integration: a crashed-and-restarted training run must
+reproduce the uninterrupted run exactly (checkpoint + per-step-seeded data).
+This is the restart contract the 1000-node design relies on
+(runtime/checkpoint.py + data/pipeline.py; DESIGN.md §4)."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import TrainPipeline
+from repro.models import model as MDL
+from repro.runtime import checkpoint as CK
+from repro.training import optimizer as OPT
+from repro.training.train import make_train_step
+
+
+def test_crash_restart_resumes_exactly(tmp_path):
+    cfg = replace(reduced(get_config("llama3.2-1b")), dtype="float32")
+    params0 = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    opt_cfg = OPT.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    step_fn = jax.jit(make_train_step(cfg, MDL.DEFAULT_RT, opt_cfg))
+    pipe = TrainPipeline(cfg.vocab_size, seq_len=16, global_batch=4)
+
+    def run(params, opt, start, stop, ckpt_every=None):
+        losses = []
+        for s in range(start, stop):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch(s).items()}
+            params, opt, m = step_fn(params, opt, batch)
+            losses.append(float(m["loss"]))
+            if ckpt_every and (s + 1) % ckpt_every == 0:
+                CK.save(tmp_path, s, {"params": params, "opt": opt})
+        return params, opt, losses
+
+    # uninterrupted reference: 10 steps
+    p_ref, o_ref, loss_ref = run(params0, OPT.init(params0), 0, 10)
+
+    # crashed run: 6 steps with checkpoints every 3, then "crash"
+    run(params0, OPT.init(params0), 0, 6, ckpt_every=3)
+    latest = CK.latest_step(tmp_path)
+    assert latest == 5
+    state = CK.restore(tmp_path, latest,
+                       {"params": params0, "opt": OPT.init(params0)})
+    # restart from the checkpoint and finish
+    p_res, o_res, loss_res = run(state["params"], state["opt"], latest + 1, 10)
+
+    np.testing.assert_allclose(loss_res, loss_ref[6:], rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_res)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_restart_on_smaller_mesh_plan():
+    """Elastic contract: after failures the remesh plan keeps the model axis
+    and the checkpoint restores into the new (smaller) data-parallel world."""
+    from repro.runtime.elastic import MeshPlan, plan_remesh
+    cur = MeshPlan(pods=1, data=4, model=4)
+    new = plan_remesh(cur, failed_devices=[5])   # kills data-row 1
+    assert new.model == 4 and new.data == 3
+    # data-axis shrink only rescales throughput; params/opt are data-replicated
+    # or re-shardable on load (checkpoint stores full arrays per host shard)

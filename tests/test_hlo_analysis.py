@@ -1,0 +1,108 @@
+"""Unit tests for the trip-count-aware HLO analyzer (launch/hlo_analysis.py)
+— the §Roofline foundation."""
+import textwrap
+
+from repro.launch import hlo_analysis as H
+
+
+def analyze(txt):
+    return H.analyze(textwrap.dedent(txt))
+
+
+def test_while_trip_count_weighting():
+    res = analyze("""
+        %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+          %p = (s32[], f32[8,8]) parameter(0)
+          %a = f32[8,8]{1,0} get-tuple-element(%p), index=1
+          %d = f32[8,8]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+          %i = s32[] get-tuple-element(%p), index=0
+          ROOT %t = (s32[], f32[8,8]) tuple(%i, %d)
+        }
+
+        %cond (p: (s32[], f32[8,8])) -> pred[] {
+          %p2 = (s32[], f32[8,8]) parameter(0)
+          %i2 = s32[] get-tuple-element(%p2), index=0
+          %c = s32[] constant(7)
+          ROOT %lt = pred[] compare(%i2, %c), direction=LT
+        }
+
+        ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+          %x = f32[8,8]{1,0} parameter(0)
+          %i0 = s32[] constant(0)
+          %t0 = (s32[], f32[8,8]) tuple(%i0, %x)
+          %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+          ROOT %g = f32[8,8]{1,0} get-tuple-element(%w), index=1
+        }
+    """)
+    # dot flops = 2*8*8*8 = 1024, x7 trips
+    assert res["flops"] == 7 * 1024
+
+
+def test_collective_byte_accounting():
+    res = analyze("""
+        ENTRY %main (x: bf16[4,8]) -> bf16[16,8] {
+          %x = bf16[4,8]{1,0} parameter(0)
+          %ag = bf16[16,8]{1,0} all-gather(%x), channel_id=1, replica_groups=[1,4]<=[4], dimensions={0}
+          %ar = bf16[16,8]{1,0} all-reduce(%ag), channel_id=2, replica_groups=[1,4]<=[4], to_apply=%add
+          ROOT %cp = bf16[16,8]{1,0} collective-permute(%ar), channel_id=3, source_target_pairs={{0,1}}
+        }
+    """)
+    ag = 16 * 8 * 2
+    assert res["collectives"]["all-gather"] == ag
+    assert res["collectives"]["all-reduce"] == 2 * ag    # ring rs+ag
+    assert res["collectives"]["collective-permute"] == ag
+
+
+def test_dus_counts_update_not_buffer():
+    res = analyze("""
+        ENTRY %main (big: f32[1000,1000], small: f32[1,1000]) -> f32[1000,1000] {
+          %big = f32[1000,1000]{1,0} parameter(0)
+          %small = f32[1,1000]{1,0} parameter(1)
+          %i = s32[] constant(3)
+          ROOT %d = f32[1000,1000]{1,0} dynamic-update-slice(%big, %small, %i, %i)
+        }
+    """)
+    # 2x update bytes (read+write slice), NOT the 4MB buffer
+    assert res["hbm_bytes"] == 2 * 1000 * 4
+
+
+def test_large_convert_zeroed_small_kept():
+    res = analyze("""
+        ENTRY %main (w: bf16[4096,4096], t: bf16[4,4]) -> f32[4,4] {
+          %w = bf16[4096,4096]{1,0} parameter(0)
+          %big = f32[4096,4096]{1,0} convert(%w)
+          %t = bf16[4,4]{1,0} parameter(1)
+          ROOT %small = f32[4,4]{1,0} convert(%t)
+        }
+    """)
+    assert res["hbm_bytes"] == 4 * 4 * 4       # only the small convert
+
+
+def test_conditional_branches_averaged():
+    res = analyze("""
+        %br0 (p: f32[8,8]) -> f32[8,8] {
+          %p = f32[8,8]{1,0} parameter(0)
+          ROOT %d = f32[8,8]{1,0} dot(%p, %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        }
+
+        %br1 (p: f32[8,8]) -> f32[8,8] {
+          %p3 = f32[8,8]{1,0} parameter(0)
+          ROOT %n = f32[8,8]{1,0} negate(%p3)
+        }
+
+        ENTRY %main (x: f32[8,8], c: pred[]) -> f32[8,8] {
+          %x = f32[8,8]{1,0} parameter(0)
+          %c = pred[] parameter(1)
+          ROOT %sel = f32[8,8]{1,0} conditional(%c, %x, %x), true_computation=%br0, false_computation=%br1
+        }
+    """)
+    assert res["flops"] == 0.5 * 1024          # one of two branches runs
+
+
+def test_roofline_terms_and_bottleneck():
+    t = H.roofline_terms({"flops": 197e12, "hbm_bytes": 819e9 * 2,
+                          "collective_bytes": 50e9 * 0.5})
+    assert abs(t["t_compute"] - 1.0) < 1e-9
+    assert abs(t["t_memory"] - 2.0) < 1e-9
+    assert abs(t["t_collective"] - 0.5) < 1e-9
+    assert t["bottleneck"] == "memory"

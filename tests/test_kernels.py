@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssm_scan import ssm_chunk_scan
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,KVH,G,D,page,maxp", [
+    (2, 1, 1, 8, 4, 3),
+    (3, 2, 4, 16, 8, 4),
+    (1, 4, 2, 32, 16, 2),
+])
+def test_paged_attention_sweep(dtype, B, KVH, G, D, page, maxp):
+    key = jax.random.PRNGKey(B + D)
+    P_ = B * maxp + 2
+    q = jax.random.normal(key, (B, KVH, G, D), jnp.float32)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (P_, page, KVH, D))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (P_, page, KVH, D))
+    bt = jnp.asarray(np.random.default_rng(0).permutation(P_)[:B * maxp]
+                     .reshape(B, maxp).astype(np.int32))
+    ctx = jnp.asarray(np.random.default_rng(1).integers(
+        1, maxp * page + 1, B).astype(np.int32))
+    out = paged_attention(q.astype(dtype), kp.astype(dtype), vp.astype(dtype),
+                          bt, ctx, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, ctx)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,KVH,G,D,T,S", [
+    (2, 2, 3, 16, 32, 4),
+    (1, 1, 8, 32, 64, 8),
+    (4, 2, 1, 8, 16, 2),
+])
+def test_flash_decode_sweep(dtype, B, KVH, G, D, T, S):
+    key = jax.random.PRNGKey(T)
+    q = jax.random.normal(key, (B, KVH, G, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, KVH, D))
+    ctx = jnp.asarray(np.random.default_rng(0).integers(1, T + 1, B),
+                      jnp.int32)
+    o, l, m = flash_decode(q.astype(dtype), k.astype(dtype), v.astype(dtype),
+                           ctx, n_splits=S, interpret=True)
+    oref, lref, mref = ref.flash_decode_ref(q, k, v, ctx, S)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               atol=TOL[dtype] * 5, rtol=TOL[dtype] * 5)
+    # merged partials == dense attention (the ITPP/EPU merge identity)
+    merged = ref.merge_flash_partials(o, l, m)
+    from repro.models.layers import decode_attention_ref
+    dense = decode_attention_ref(q.reshape(B, KVH * G, D), k, v, ctx)
+    np.testing.assert_allclose(np.asarray(merged.reshape(B, KVH * G, D)),
+                               np.asarray(dense), atol=TOL[dtype] * 5,
+                               rtol=TOL[dtype] * 5)
+
+
+@pytest.mark.parametrize("B,S,H,N,P,chunk", [
+    (2, 32, 3, 8, 16, 8),
+    (1, 64, 1, 4, 4, 16),
+    (3, 16, 2, 16, 8, 4),
+])
+def test_ssm_scan_sweep(B, S, H, N, P, chunk):
+    key = jax.random.PRNGKey(S)
+    q = jax.random.normal(key, (B, S, H, N))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, N))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, P))
+    la = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (B, S, H)))
+    lg = jax.random.normal(jax.random.PRNGKey(4), (B, S, H)) * 0.1
+    y, st_ = ssm_chunk_scan(q, k, v, la, lg, chunk=chunk, interpret=True)
+    yref, (Cref, _, _) = ref.ssm_chunk_scan_ref(q, k, v, la, lg, None, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(Cref), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,H,KVH,D,causal,window", [
+    (2, 16, 4, 2, 16, True, 0),
+    (1, 32, 8, 2, 8, True, 8),
+    (2, 16, 4, 4, 16, False, 0),
+    (1, 24, 6, 3, 8, True, 5),
+])
+def test_flash_attention_fwd_sweep(dtype, B, Sq, H, KVH, D, causal, window):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.models.layers import flash_attention
+    key = jax.random.PRNGKey(Sq)
+    q = jax.random.normal(key, (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Sq, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Sq, KVH, D))
+    out = flash_attention_fwd(q.astype(dtype), k.astype(dtype),
+                              v.astype(dtype), causal=causal, window=window,
+                              q_blk=8, kv_blk=8, interpret=True)
+    ref = flash_attention(q, k, v, causal=causal, window=window, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=TOL[dtype] * 3, rtol=TOL[dtype] * 3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_merge_partials_property(data):
+    """Property: stable merge of ANY split of the KV is split-invariant."""
+    B = data.draw(st.integers(1, 3))
+    KVH = data.draw(st.sampled_from([1, 2]))
+    G = data.draw(st.sampled_from([1, 2, 4]))
+    D = data.draw(st.sampled_from([8, 16]))
+    T = 32
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 100)))
+    q = jax.random.normal(key, (B, KVH, G, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, KVH, D))
+    ctx = jnp.asarray(data.draw(st.lists(st.integers(1, T), min_size=B,
+                                         max_size=B)), jnp.int32)
+    merged = {}
+    for s in (1, 2, 4, 8):
+        o, l, m = ref.flash_decode_ref(q, k, v, ctx, s)
+        merged[s] = np.asarray(ref.merge_flash_partials(o, l, m))
+    for s in (2, 4, 8):
+        np.testing.assert_allclose(merged[s], merged[1], atol=2e-5, rtol=2e-5)

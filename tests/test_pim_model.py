@@ -1,0 +1,58 @@
+"""PIM cost-model properties + paper-claim tolerances."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pim_model as PM
+
+KW = dict(avg_ctx=16362, max_ctx=32768, ctx_cv=0.1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([2, 4, 8, 16]), lvl=st.integers(0, 3))
+def test_more_nodes_never_slower(n, lvl):
+    a = PM.throughput(PM.lol_pim(n, level=lvl), PM.QWEN_7B, **KW)
+    b = PM.throughput(PM.lol_pim(2 * n, level=lvl), PM.QWEN_7B, **KW)
+    assert b["tokens_per_s"] >= a["tokens_per_s"] * 0.95
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]))
+def test_each_technique_level_helps(n):
+    t = [PM.throughput(PM.lol_pim(n, level=l), PM.QWEN_7B, **KW)
+         ["tokens_per_s"] for l in (0, 1, 2, 3)]
+    assert t[3] >= t[2] >= t[0] * 0.9
+    assert t[3] > 1.5 * t[0]          # the paper's combined >=2x at scale
+
+
+def test_lazy_alloc_batch_ratio():
+    base = PM.max_batch(PM.lol_pim(4, level=0), PM.QWEN_7B, 8192, 32768)
+    lazy = PM.max_batch(PM.lol_pim(4, level=2), PM.QWEN_7B, 8192, 32768)
+    assert lazy >= 3 * base            # ~max_ctx/avg_ctx = 4x (paper: 380%)
+
+
+def test_pingpong_never_hurts():
+    for n in (2, 8):
+        a = PM.decode_latency(PM.lol_pim(n, level=2), PM.QWEN_7B, 32, 16384)
+        b = PM.decode_latency(PM.lol_pim(n, level=3), PM.QWEN_7B, 32, 16384)
+        assert b["t_step"] <= a["t_step"] + 1e-9
+
+
+def test_table8_within_tolerance():
+    rows = {"7B": (4, PM.QWEN_7B, (1833, 2455, 3668)),
+            "14B": (5, PM.QWEN_14B, (1309, 1737, 2553)),
+            "72B": (16, PM.QWEN_72B, (737, 1211, 1740))}
+    kw = dict(avg_ctx=16362, max_ctx=32768, ctx_cv=1651 / 16362)
+    for name, (n, m, tg) in rows.items():
+        for lvl, t in zip((0, 2, 3), tg):
+            r = PM.throughput(PM.lol_pim(n, level=lvl), m, **kw)
+            err = abs(r["tokens_per_s"] - t) / t
+            assert err < 0.25, (name, lvl, r["tokens_per_s"], t)
+
+
+def test_72b_headline_ratio():
+    """Paper §8.2: 72B LoL-PIM vs baseline PIM = 2.65x at 1 TB."""
+    kw = dict(avg_ctx=16362, max_ctx=32768, ctx_cv=0.1)
+    lol = PM.throughput(PM.lol_pim(16, level=3), PM.QWEN_72B, **kw)
+    base = PM.throughput(PM.lol_pim(16, level=0), PM.QWEN_72B, **kw)
+    ratio = lol["tokens_per_s"] / base["tokens_per_s"]
+    assert 2.0 < ratio < 3.5, ratio

@@ -1,0 +1,63 @@
+"""int8 weight-only quantization (core/quant.py) — serving path."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import quant as Q
+from repro.models import model as MDL
+from repro.models.layers import dense
+
+
+def test_roundtrip_error_bounded():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 128)) * 0.05
+    qw = Q.quantize_tensor(w)
+    deq = Q.dequantize_tensor(qw, jnp.float32)
+    rel = float(jnp.abs(deq - w).max() / jnp.abs(w).max())
+    assert rel < 1.0 / 127 + 1e-3
+    assert qw["q"].dtype == jnp.int8 and qw["s"].shape == (1, 128)
+
+
+def test_dense_qtensor_matches_dequantized():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32)) * 0.1
+    qw = Q.quantize_tensor(w)
+    y_q = dense(x, qw)
+    y_deq = dense(x, Q.dequantize_tensor(qw, jnp.float32))
+    np.testing.assert_allclose(np.asarray(y_q), np.asarray(y_deq),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mixtral-8x22b"])
+def test_quantized_decode_close_to_fp(arch):
+    cfg = replace(reduced(get_config(arch)), dtype="float32")
+    if cfg.is_moe:
+        cfg = replace(cfg, capacity_factor=8.0)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    qparams = Q.quantize_params(params, min_size=1)
+    assert Q.quantized_bytes(qparams) < 0.65 * Q.quantized_bytes(params)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    lg_fp, _ = MDL.forward(cfg, params, toks)
+    lg_q, _ = MDL.forward(cfg, qparams, toks)
+    fp = np.asarray(lg_fp)
+    qq = np.asarray(lg_q)
+    # per-channel int8 keeps logits within a small fraction of their spread
+    assert np.abs(qq - fp).max() < 0.12 * (fp.max() - fp.min())
+    # and greedy decisions overwhelmingly agree
+    agree = (fp.argmax(-1) == qq.argmax(-1)).mean()
+    assert agree >= 0.75, agree
+
+
+def test_quantize_params_skips_small_and_norms():
+    cfg = replace(reduced(get_config("llama3.2-1b")), dtype="float32")
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    qp = Q.quantize_params(params)  # default min_size keeps smoke weights fp
+    kinds = {type(x) for x in jax.tree.leaves(
+        qp, is_leaf=Q.is_qtensor) if Q.is_qtensor(x)}
+    # embed table must never be quantized (gather path)
+    assert not Q.is_qtensor(qp["embed"])

@@ -1,0 +1,69 @@
+"""Sharding-plan invariants for every assigned arch, without real devices
+(AbstractMesh): every sharded dim must divide its mesh axis, for both the
+train (FSDP) and serve (Megatron-TP + EP) layouts, single- and multi-pod."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ASSIGNED, SHAPES, ParallelConfig, get_config
+from repro.distributed.sharding import make_plan
+from repro.models import model as MDL
+
+
+def abstract_mesh(multi_pod):
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    cfg = get_config(arch)
+    mesh = abstract_mesh(multi_pod)
+    sizes = dict(mesh.shape)
+    parallel = ParallelConfig(pods=2 if multi_pod else 1)
+    plan = make_plan(mesh, parallel, SHAPES["train_4k"])
+    params = jax.eval_shape(lambda: MDL.init_params(
+        cfg, jax.random.PRNGKey(0),
+        moe_virtual=parallel.tp if cfg.is_moe else 0))
+    for mode in ("train", "serve"):
+        specs = plan.param_specs(params, mode=mode)
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            for dim, names in zip(leaf.shape, spec):
+                if names is None:
+                    continue
+                names = names if isinstance(names, tuple) else (names,)
+                n = int(np.prod([sizes[a] for a in names]))
+                assert dim % n == 0, (arch, mode, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_plan_layout_selection(shape_name):
+    mesh = abstract_mesh(False)
+    plan = make_plan(mesh, ParallelConfig(), SHAPES[shape_name])
+    if shape_name == "train_4k":
+        assert plan.train_layout == "fsdp"       # 256 % 256 == 0
+    if shape_name == "prefill_32k":
+        assert plan.train_layout == "sp"
+    if shape_name == "long_500k":
+        assert plan.batch_spec is None           # batch=1 can't shard
+        spec = plan.itpp_spec(256)
+        assert spec.merge_axes == spec.page_axes  # merge over the whole pod
+    if shape_name == "decode_32k":
+        spec = plan.itpp_spec(256)
+        assert spec.merge_axes == ("model",)     # row-affine requests
+
+
+def test_pool_pages_divide_shards():
+    from repro.core.paged_kv import pool_spec_for
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sn in ("decode_32k", "long_500k"):
+            spec = pool_spec_for(cfg, SHAPES[sn], ParallelConfig())
+            assert spec.n_pages % 256 == 0, (arch, sn)

@@ -1,0 +1,99 @@
+"""SSM invariants: chunked-parallel == exact sequential, under hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssm as S
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_chunked_gla_equals_sequential(data):
+    B = data.draw(st.integers(1, 2))
+    H = data.draw(st.sampled_from([1, 3]))
+    dk = data.draw(st.sampled_from([2, 4, 8]))
+    dv = data.draw(st.sampled_from([2, 5]))
+    chunk = data.draw(st.sampled_from([1, 2, 4, 8]))
+    n_chunks = data.draw(st.integers(1, 4))
+    S_ = chunk * n_chunks
+    normalize = data.draw(st.booleans())
+    seed = data.draw(st.integers(0, 1000))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, S_, H, dk))
+    k = jax.random.normal(ks[1], (B, S_, H, dk))
+    v = jax.random.normal(ks[2], (B, S_, H, dv))
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S_, H)))
+    lg = jax.random.normal(ks[4], (B, S_, H)) * 0.5
+    y, state = S.chunked_gla(q, k, v, la, lg, chunk=chunk, normalize=normalize)
+    # exact sequential reference
+    if normalize:
+        st0 = (jnp.zeros((B, H, dk, dv)), jnp.zeros((B, H, dk)),
+               jnp.full((B, H), -1e30))
+    else:
+        st0 = (jnp.zeros((B, H, dk, dv)), jnp.zeros((B, H, dk)),
+               jnp.zeros((B, H)))
+    ys = []
+    cur = st0
+    for t in range(S_):
+        yt, cur = S.gla_step(q[:, t], k[:, t], v[:, t], la[:, t], lg[:, t],
+                             cur, normalize=normalize)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state[0]), np.asarray(cur[0]),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(split=st.integers(1, 15), seed=st.integers(0, 100))
+def test_state_handoff_is_split_invariant(split, seed):
+    """prefill-then-decode equals one shot: chunked_gla with carried state."""
+    B, S_, H, dk, dv = 1, 16, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, S_, H, dk))
+    k = jax.random.normal(ks[1], (B, S_, H, dk))
+    v = jax.random.normal(ks[2], (B, S_, H, dv))
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S_, H)))
+    lg = jax.random.normal(ks[4], (B, S_, H)) * 0.3
+    y_full, _ = S.chunked_gla(q, k, v, la, lg, chunk=1, normalize=True)
+    y1, st1 = S.chunked_gla(q[:, :split], k[:, :split], v[:, :split],
+                            la[:, :split], lg[:, :split], chunk=1,
+                            normalize=True)
+    y2, _ = S.chunked_gla(q[:, split:], k[:, split:], v[:, split:],
+                          la[:, split:], lg[:, split:], chunk=1,
+                          normalize=True, state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_and_mlstm_blocks_parallel_vs_step():
+    from dataclasses import replace
+    from repro.configs import get_config, reduced
+    zc = replace(reduced(get_config("zamba2-1.2b")), dtype="float32")
+    xc = replace(reduced(get_config("xlstm-350m")), dtype="float32")
+    B, T = 2, 8
+    key = jax.random.PRNGKey(0)
+    p = S.init_mamba(key, zc, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, zc.d_model)) * 0.5
+    y_par, _ = S.mamba_forward(p, zc, x, state=S.mamba_init_state(zc, B),
+                               chunk=4)
+    stt = S.mamba_init_state(zc, B)
+    ys = []
+    for t in range(T):
+        yt, stt = S.mamba_step(p, zc, x[:, t], stt)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_par),
+                               np.asarray(jnp.stack(ys, 1)), atol=1e-5)
+
+    pm = S.init_mlstm(key, xc, jnp.float32)
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (B, T, xc.d_model)) * 0.5
+    ym, _ = S.mlstm_forward(pm, xc, x2, state=S.mlstm_init_state(xc, B),
+                            chunk=4)
+    stt = S.mlstm_init_state(xc, B)
+    ys = []
+    for t in range(T):
+        yt, stt = S.mlstm_step(pm, xc, x2[:, t], stt)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(jnp.stack(ys, 1)),
+                               atol=1e-5)
