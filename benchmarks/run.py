@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Figure/table mapping:
   fig12_*   Fig. 12    per-op latency breakdown, standalone vs GPU+PIM
   table8_*  Table 8    throughput+utilization across scales (utilization.py)
   kernel_*  Table 6    kernel-vs-oracle validation (kernel_bench.py)
+  serving_* host loop  prefill-mode throughput + host overhead
+                       (serving_bench.py — slot vs batched vs chunked)
 """
 from __future__ import annotations
 
@@ -18,8 +20,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (io_overlap, kernel_bench, latency_breakdown,
-                            lazy_alloc, throughput_scaling, tp_pp_ablation,
-                            utilization)
+                            lazy_alloc, serving_bench, throughput_scaling,
+                            tp_pp_ablation, utilization)
 
     rows: list[tuple[str, float, str]] = []
 
@@ -30,7 +32,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     for mod in (throughput_scaling, tp_pp_ablation, lazy_alloc, io_overlap,
-                latency_breakdown, utilization, kernel_bench):
+                latency_breakdown, utilization, kernel_bench, serving_bench):
         try:
             mod.run(emit)
         except Exception as e:  # noqa: BLE001

@@ -59,4 +59,20 @@ for t in range(S_pre, S):
                                 npage, noff)
     ok = np.allclose(lg, logits[:, t], atol=5e-3)
     print(f"decode t={t}: argmax={int(jnp.argmax(lg[0]))} matches forward: {ok}")
+
+# ---- 3. serving engine: continuous batching over the same model ----
+# (the layered repro.serving subsystem: batched prefill + FCFS admission +
+# jitted greedy sampling; see docs/serving.md)
+if cfg.family != "encdec":
+    from repro.serving import DecodeEngine, EngineConfig
+    ecfg = EngineConfig(n_slots=2, page_size=page, n_pages=64, max_context=32,
+                        eos_token=-1, prefill_mode="batched")
+    eng = DecodeEngine(cfg, ecfg, params)
+    rng = np.random.default_rng(0)
+    for r in range(3):
+        eng.submit(r, rng.integers(0, cfg.vocab_size, size=6), 4)
+    outs = eng.run(100)
+    print(f"serving: completed={eng.batcher.stats.completed} "
+          f"prefill={eng.prefiller.name} "
+          f"outputs={[list(v) for v in outs.values()]}")
 print("done.")

@@ -1,158 +1,10 @@
-"""Decode engine: continuous batching + lazy paged allocation + the model.
+"""Back-compat shim: the decode engine now lives in ``repro.serving``.
 
-The host loop mirrors the paper's Fig. 2(c): each iteration the host updates
-the "configuration buffer" (block tables, context lengths, write targets) and
-dispatches one compiled decode step; EOS requests release their pages and
-their slot refills from the queue (Fig. 2(b)). Prefill for newly admitted
-requests runs on the same weights.
-
-This engine is the single-host functional version (used by tests, examples
-and the lazy-allocation benchmark); launch/serve.py wraps it with the mesh
-sharding plan for the production layout.
+The monolithic DecodeEngine was split into a layered package —
+``repro.serving.engine`` (orchestration), ``.prefill`` (slot / batched /
+chunked strategies), ``.policies`` (admission), ``.sampling`` (jitted
+samplers). Import from ``repro.serving`` in new code.
 """
-from __future__ import annotations
+from repro.serving.engine import DecodeEngine, EngineConfig  # noqa: F401
 
-from dataclasses import dataclass, field
-from typing import Any, Callable
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.allocator import PageAllocator
-from repro.core.paged_kv import PoolSpec
-from repro.core.scheduler import ContinuousBatcher, Request
-from repro.models import model as MDL
-
-
-@dataclass
-class EngineConfig:
-    n_slots: int
-    page_size: int
-    n_pages: int
-    max_context: int
-    n_shards: int = 1
-    n_rows: int = 1
-    policy: str = "striped"           # striped | row_affine
-    static_alloc: bool = False        # baseline-PIM static max-ctx allocation
-    eos_token: int = 1
-    max_prefill: int = 64             # engine pads prompts to this
-
-
-class DecodeEngine:
-    def __init__(self, cfg, ecfg: EngineConfig, params=None, rt=None,
-                 *, sample: Callable | None = None):
-        self.cfg = cfg
-        self.ecfg = ecfg
-        self.rt = rt or MDL.DEFAULT_RT
-        self.params = params if params is not None else MDL.init_params(
-            cfg, jax.random.PRNGKey(0), jnp.float32)
-        kinds = cfg.block_kinds()
-        n_attn = cfg.n_layers if cfg.family == "encdec" else \
-            sum(1 for k in kinds if k in ("attn", "local"))
-        maxp = -(-ecfg.max_context // ecfg.page_size) + 1
-        self.pool_spec = PoolSpec(
-            max(n_attn, 1), ecfg.n_pages, ecfg.page_size, cfg.n_kv_heads,
-            cfg.d_head, maxp, dtype="float32")
-        static_pages = maxp if ecfg.static_alloc else None
-        self.alloc = PageAllocator(
-            ecfg.n_pages, ecfg.n_shards, ecfg.page_size, policy=ecfg.policy,
-            n_rows=ecfg.n_rows, static_max_pages=static_pages)
-        self.batcher = ContinuousBatcher(
-            self.alloc, ecfg.n_slots, max_context=ecfg.max_context,
-            n_rows=ecfg.n_rows)
-        self.state = MDL.init_decode_state(cfg, self.pool_spec, ecfg.n_slots,
-                                           dtype="float32")
-        self.tokens = np.zeros((ecfg.n_slots,), np.int32)
-        self.prompts: dict[int, np.ndarray] = {}
-        self.outputs: dict[int, list[int]] = {}
-        self.sample = sample or (lambda logits: np.argmax(logits, -1))
-        self._decode_jit = None
-
-    # ------------------------------------------------------------------
-    def submit(self, req_id: int, prompt: np.ndarray,
-               max_new_tokens: int) -> None:
-        self.prompts[req_id] = np.asarray(prompt, np.int32)
-        self.outputs[req_id] = []
-        self.batcher.submit(Request(req_id, len(prompt), max_new_tokens))
-
-    def _prefill_slot(self, slot: int, req: Request) -> None:
-        """Run the prompt through the model into this slot's pages.
-
-        The functional prefill writes whole-batch; for slot-wise admission we
-        run a batch-1 prefill and merge its cache rows into the engine state.
-        """
-        prompt = self.prompts[req.req_id]
-        bt = self.alloc.block_table(req.req_id, self.pool_spec.max_pages_per_req)
-        state1 = MDL.init_decode_state(self.cfg, self.pool_spec, 1,
-                                       dtype="float32")
-        # share the pool so pages written land in the engine pool
-        if "pool" in self.state:
-            state1["pool"] = self.state["pool"]
-        logits, state1 = MDL.prefill(
-            self.cfg, self.params, state1, jnp.asarray(prompt[None]),
-            jnp.asarray(bt[None]), rt=self.rt,
-            frames=(jnp.zeros((1, self.cfg.enc_seq, self.cfg.d_model),
-                              jnp.float32)
-                    if self.cfg.family == "encdec" else None))
-        if "pool" in self.state:
-            self.state["pool"] = state1["pool"]
-        for key in ("mamba", "mlstm", "slstm", "cross_k", "cross_v"):
-            if key in self.state:
-                def put(dst, src):
-                    return dst.at[:, slot].set(src[:, 0])
-                self.state[key] = jax.tree.map(put, self.state[key],
-                                               state1[key])
-        self.tokens[slot] = int(self.sample(np.asarray(logits)[0]))
-        self.outputs[req.req_id].append(int(self.tokens[slot]))
-
-    # ------------------------------------------------------------------
-    def step(self, finished_mask=None):
-        """One engine tick: admit+prefill, then one batched decode step."""
-        admitted, active = self.batcher.step(finished_mask)
-        for slot, req in admitted:
-            req.generated = 1          # prefill emits the first token
-            self._prefill_slot(slot, req)
-        if not active:
-            return np.zeros((self.ecfg.n_slots,), bool)
-        E = self.ecfg
-        ctx = self.batcher.context_lens()
-        bt = self.batcher.block_tables(self.pool_spec.max_pages_per_req)
-        npage = np.zeros((E.n_slots,), np.int32)
-        noff = np.zeros((E.n_slots,), np.int32)
-        W = self.pool_spec.max_pages_per_req
-        for s in active:
-            t = ctx[s] - 1             # slot of the token being written
-            vp = t // E.page_size
-            if self.rt.ring_width:
-                vp = vp % self.rt.ring_width
-            row = self.alloc.block_table(self.batcher.slots[s].req_id, W)
-            npage[s] = row[vp]
-            noff[s] = t % E.page_size
-        if self._decode_jit is None:
-            def fn(params, state, tokens, bt, ctx, npage, noff):
-                return MDL.decode_step(self.cfg, params, state, tokens, bt,
-                                       ctx, npage, noff, rt=self.rt)
-            self._decode_jit = jax.jit(fn)
-        logits, self.state = self._decode_jit(
-            self.params, self.state, jnp.asarray(self.tokens),
-            jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(npage),
-            jnp.asarray(noff))
-        logits = np.asarray(logits)
-        finished = np.zeros((E.n_slots,), bool)
-        for s in active:
-            req = self.batcher.slots[s]
-            nxt = int(self.sample(logits[s]))
-            self.tokens[s] = nxt
-            self.outputs[req.req_id].append(nxt)
-            if nxt == E.eos_token or req.generated >= req.max_new_tokens:
-                finished[s] = True
-        return finished
-
-    def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
-        finished = None
-        for _ in range(max_steps):
-            if self.batcher.done():
-                break
-            finished = self.step(finished)
-        return self.outputs
+__all__ = ["DecodeEngine", "EngineConfig"]

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.jax_compat import shard_map
 from repro.core.paged_kv import merge_partials, partial_decode_attention
 
 
@@ -176,7 +177,7 @@ def make_prefill_writer(mesh, spec: ItppSpec, *, seq_axis: str):
     b = spec.batch_axis
     pool_spec = P(spec.page_axes, None, None, None)
     kv = P(b, seq_axis, None, None)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(pool_spec, pool_spec, kv, kv, P(b, None)),
         out_specs=(pool_spec, pool_spec), check_vma=False)
@@ -206,5 +207,5 @@ def make_itpp_attention(mesh, spec: ItppSpec, *, max_pages_per_req: int,
     out_specs = (qspec, pool_spec, pool_spec)
     in_specs = (qspec, kvspec, kvspec, pool_spec, pool_spec, bspec, cspec,
                 cspec, cspec, P())
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)

@@ -1,0 +1,58 @@
+"""Version-portable wrappers for jax APIs that moved between releases.
+
+The sharded runtime (core/itpp.py, distributed/*) is written against the
+newer ``jax.shard_map``/``jax.make_mesh(axis_types=...)`` surface; on the
+pinned jax (0.4.x) those live under ``jax.experimental.shard_map`` with
+different keyword names (``check_rep``/``auto`` instead of
+``check_vma``/``axis_names``) and ``jax.sharding.AxisType`` does not exist.
+Everything in-repo goes through these wrappers so a jax upgrade is a no-op.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` across its two constructor signatures:
+    jax <= 0.4.x takes one ``((name, size), ...)`` tuple; newer jax takes
+    ``(sizes, names)`` positionally."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+    except TypeError:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs, check_vma: bool = False,
+              axis_names=None):
+    """Portable ``shard_map``.
+
+    ``axis_names`` is the newer partial-manual spelling (the set of axes the
+    body is manual over); on older jax it maps onto ``auto = mesh axes -
+    axis_names``, which requires an explicit mesh.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = dict(in_specs=in_specs, out_specs=out_specs, check_vma=check_vma)
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    assert mesh is not None, \
+        "jax<0.5 shard_map needs an explicit mesh (no ambient-mesh form)"
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)

@@ -93,15 +93,20 @@ def write_token(pool_layer_k, pool_layer_v, k_new, v_new, page_ids, offsets):
 
 
 def write_prefill(pool_layer_k, pool_layer_v, k_seq, v_seq, block_table,
-                  ctx_start=0, ring_width: int = 0):
+                  ctx_start=0, ring_width: int = 0, valid_len=None):
     """Scatter a whole prefilled sequence into the pool.
 
     k_seq/v_seq [B, S, KVH, D]; block_table [B, maxp]. Token t of request b
     goes to page block_table[b, (ctx_start+t)//page] slot (ctx_start+t)%page.
     ``ring_width``>0: sliding-window pools recycle table slots mod ring_width
     (later tokens overwrite expired pages — bounded KV, DPA-style reuse).
+    ``valid_len`` [B]: only the first valid_len[b] tokens of request b are
+    written (length-bucketed batched prefill pads prompts to a shared S; pad
+    positions and -1 block-table entries route out of bounds and are dropped
+    by the scatter).
     """
     B, S = k_seq.shape[:2]
+    n_pool = pool_layer_k.shape[0]
     page = pool_layer_k.shape[1]
     t = ctx_start + jnp.arange(S)
     vpage = t // page                                     # [S]
@@ -110,6 +115,10 @@ def write_prefill(pool_layer_k, pool_layer_v, k_seq, v_seq, block_table,
     off = t % page
     pids = jnp.take_along_axis(block_table,
                                jnp.broadcast_to(vpage[None], (B, S)), axis=1)
+    pids = jnp.where(pids < 0, n_pool, pids)              # unallocated -> drop
+    if valid_len is not None:
+        pad = jnp.arange(S)[None] >= valid_len[:, None]   # [B, S]
+        pids = jnp.where(pad, n_pool, pids)
     offs = jnp.broadcast_to(off[None], (B, S))
     pk = pool_layer_k.at[pids, offs].set(k_seq.astype(pool_layer_k.dtype),
                                          mode="drop")

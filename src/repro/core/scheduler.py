@@ -6,6 +6,18 @@ from the waiting queue in the same scheduling tick — the paper's
 "Request-1 ... replaced with Request-5" flow. Works with either lazy (DPA)
 or static (baseline) allocation, which is how the lazy-allocation benchmark
 reproduces the paper's batch-size growth (Fig. 4(b), §5.4).
+
+Two serving hooks (repro.serving builds on these):
+
+* ``policy`` — admission is pluggable: a policy object picks which queued
+  request fills an open slot (FCFS / SJF / memory-aware live in
+  ``repro.serving.policies``). ``policy=None`` keeps the seed strict
+  head-of-line FCFS scan.
+* incrementally-maintained host snapshots — the [n_slots, width] block-table
+  matrix and the context-length vector are updated page-by-page as requests
+  are admitted / grown / freed instead of being rebuilt from the allocator
+  dict every tick, so the engine's per-tick "configuration buffer" update
+  (paper Fig. 2(c)) is O(changes), not O(slots x width).
 """
 from __future__ import annotations
 
@@ -24,6 +36,11 @@ class Request:
     max_new_tokens: int
     arrived_at: int = 0
     generated: int = 0
+    # chunked_prefill: this request prefills in chunks (DCS-style
+    # interleave); prefill_done is False while chunks are still streaming —
+    # the slot is occupied but excluded from decode.
+    chunked_prefill: bool = False
+    prefill_done: bool = True
 
     @property
     def total_len(self) -> int:
@@ -46,14 +63,22 @@ class SchedulerStats:
 
 class ContinuousBatcher:
     def __init__(self, allocator: PageAllocator, n_slots: int, *,
-                 max_context: int, n_rows: int = 1):
+                 max_context: int, n_rows: int = 1, policy=None,
+                 bt_width: int | None = None):
         self.alloc = allocator
         self.n_slots = n_slots
         self.max_context = max_context
         self.n_rows = n_rows
+        self.policy = policy
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
         self.stats = SchedulerStats()
+        # host-side snapshots, maintained incrementally (see module docstring)
+        self._bt_width = bt_width
+        self._bt = (np.full((n_slots, bt_width), -1, np.int32)
+                    if bt_width else None)
+        self._npages = np.zeros((n_slots,), np.int32)
+        self._ctx = np.zeros((n_slots,), np.int32)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -62,20 +87,98 @@ class ContinuousBatcher:
     def _row_of_slot(self, slot: int) -> int:
         return slot * self.n_rows // self.n_slots
 
+    # ---- snapshot maintenance ----------------------------------------
+    def _snap_admit(self, s: int, req: Request, pages: list[int]) -> None:
+        self._npages[s] = len(pages)
+        self._ctx[s] = req.prompt_len if req.prefill_done else 0
+        if self._bt is not None:
+            self._bt[s, :len(pages)] = pages
+
+    def _snap_grow(self, s: int, new: list[int]) -> None:
+        if new:
+            n = int(self._npages[s])
+            self._npages[s] = n + len(new)
+            if self._bt is not None:
+                self._bt[s, n:n + len(new)] = new
+
+    def _snap_clear(self, s: int) -> None:
+        self._npages[s] = 0
+        self._ctx[s] = 0
+        if self._bt is not None:
+            self._bt[s, :] = -1
+
+    def _preempt(self, s: int, req: Request) -> None:
+        """Pool exhausted mid-decode: free pages, requeue at the front for
+        re-prefill of the reconstructable context — the lazy-allocation
+        analogue of vLLM preemption.
+
+        The reconstructable context is prompt + *written* generated tokens:
+        when anything was generated, the last sampled token's KV was never
+        written (it re-enters as the next decode input after re-prefill),
+        and ``generated`` was already incremented this tick for a token
+        never sampled — hence total_len - 1, not total_len. The remaining
+        budget keeps the request's total emission where it would have been
+        without preemption (``- generated + 1``: a fresh incarnation emits
+        max_new + 1 tokens — prefill emits the first — while a resumed one
+        emits exactly max_new, one per decode tick)."""
+        self.alloc.free(req.req_id)
+        if req.generated:
+            req.prompt_len = req.total_len - 1
+            req.max_new_tokens = max(1, req.max_new_tokens
+                                     - req.generated + 1)
+        req.generated = 0
+        req.prefill_done = not req.chunked_prefill
+        self.queue.appendleft(req)
+        self.slots[s] = None
+        self._snap_clear(s)
+        self.stats.preempted += 1
+
+    def mark_prefill_done(self, s: int) -> bool:
+        """Chunked prefill finished for slot ``s``: the request joins the
+        decode batch with its first generated token counted (the engine sets
+        ``generated=1`` before calling). Allocates the growth page the seed's
+        admission-tick ``ensure`` would have grabbed; returns False (and
+        preempts) if the pool is exhausted."""
+        req = self.slots[s]
+        req.prefill_done = True
+        if req.total_len <= self.max_context:
+            try:
+                self._snap_grow(s, self.alloc.ensure(req.req_id,
+                                                     req.total_len))
+            except MemoryError:
+                # the first token was sampled but never written/emitted:
+                # requeue the bare prompt, not prompt+1
+                req.generated = 0
+                self._preempt(s, req)
+                return False
+        self._ctx[s] = req.total_len
+        return True
+
+    # ------------------------------------------------------------------
     def _try_admit(self) -> list[tuple[int, Request]]:
         """Fill empty slots from the queue. Returns [(slot, request)] newly
-        admitted (the engine must run prefill for these)."""
+        admitted (the engine must run prefill for these). With a policy the
+        next request is whatever ``policy.select`` picks; the policy must
+        only pick requests that pass ``alloc.can_admit``."""
         admitted = []
         for s in range(self.n_slots):
             if self.slots[s] is not None or not self.queue:
                 continue
-            req = self.queue[0]
-            row = self._row_of_slot(s) if self.alloc.policy == "row_affine" else None
-            if not self.alloc.can_admit(req.prompt_len, row):
-                continue   # head-of-line blocked on memory; try next tick
-            self.queue.popleft()
-            self.alloc.admit(req.req_id, req.prompt_len, row)
+            row = self._row_of_slot(s) if self.alloc.policy == "row_affine" \
+                else None
+            if self.policy is not None:
+                idx = self.policy.select(self, row)
+                if idx is None:
+                    continue
+            else:                      # seed behavior: strict head-of-line
+                if not self.alloc.can_admit(self.queue[0].prompt_len, row):
+                    continue   # head-of-line blocked on memory; try next tick
+                idx = 0
+            req = self.queue[idx]
+            del self.queue[idx]
+            pages = self.alloc.admit(req.req_id, req.prompt_len, row)
             self.slots[s] = req
+            self._snap_admit(s, req, pages)
             self.stats.admitted += 1
             admitted.append((s, req))
         return admitted
@@ -86,37 +189,35 @@ class ContinuousBatcher:
         ``finished_mask`` [n_slots] — which active slots finished on the
         *previous* step (EOS sampled / budget reached). Frees their pages,
         refills slots, lazily grows every active request by one token.
+        Slots still in chunked prefill are occupied but not active.
         Returns (admitted, active_slots).
         """
         if finished_mask is not None:
-            for s in range(self.n_slots):
-                if finished_mask[s] and self.slots[s] is not None:
+            for s in np.flatnonzero(finished_mask):
+                if self.slots[s] is not None:
                     self.alloc.free(self.slots[s].req_id)
                     self.stats.completed += 1
                     self.slots[s] = None
+                    self._snap_clear(s)
         admitted = self._try_admit()
         active = []
         for s, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not req.prefill_done:
                 continue
             req.generated += 1
+            self._ctx[s] = req.total_len
             if req.total_len <= self.max_context:
                 try:
-                    self.alloc.ensure(req.req_id, req.total_len)
+                    self._snap_grow(s, self.alloc.ensure(req.req_id,
+                                                         req.total_len))
                 except MemoryError:
-                    # pool exhausted mid-decode: preempt (free pages, requeue
-                    # at the front for re-prefill of prompt+generated) — the
-                    # lazy-allocation analogue of vLLM preemption
-                    self.alloc.free(req.req_id)
-                    req.prompt_len = req.total_len
-                    req.max_new_tokens = max(1, req.max_new_tokens
-                                             - req.generated)
-                    req.generated = 0
-                    self.queue.appendleft(req)
-                    self.slots[s] = None
-                    self.stats.preempted += 1
+                    self._preempt(s, req)
                     continue
             active.append(s)
+        # a page-aligned request can be admitted and preempted in the SAME
+        # tick (its +1 growth page was the last straw) — it is back in the
+        # queue, so it must not be prefilled
+        admitted = [(s, r) for s, r in admitted if self.slots[s] is r]
         self.stats.steps += 1
         self.stats.occupied_slot_steps += len(active)
         self.stats.batch_trace.append(len(active))
@@ -124,16 +225,26 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------
     def block_tables(self, width: int) -> np.ndarray:
-        """Device block-table snapshot [n_slots, width]."""
+        """Device block-table snapshot [n_slots, width]. When ``width``
+        matches the maintained snapshot this is O(1) (the live array —
+        treat as read-only); otherwise falls back to rebuilding."""
+        if self._bt is not None and width == self._bt_width:
+            return self._bt
         out = np.full((self.n_slots, width), -1, np.int32)
         for s, req in enumerate(self.slots):
             if req is not None:
                 out[s] = self.alloc.block_table(req.req_id, width)
         return out
 
+    def block_table_row(self, slot: int) -> np.ndarray:
+        """One request's Va2Pa row (read-only view of the snapshot)."""
+        if self._bt is not None:
+            return self._bt[slot]
+        return self.alloc.block_table(self.slots[slot].req_id,
+                                      self._bt_width or 1)
+
     def context_lens(self) -> np.ndarray:
-        return np.asarray([0 if r is None else r.total_len
-                           for r in self.slots], np.int32)
+        return self._ctx.copy()
 
     def done(self) -> bool:
         return not self.queue and all(s is None for s in self.slots)

@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.itpp import ItppSpec, itpp_decode_attention_shard
+from repro.core.jax_compat import shard_map
 from repro.models import layers as L
 from repro.models import model as MDL
 from repro.models import moe as MOE
@@ -43,7 +44,7 @@ def stack_stages(stacked, n_stages: int):
 
 
 def _inner_itpp(spec: ItppSpec, max_pages_per_req: int, ring_width: int,
-                mesh_axis_sizes):
+                mesh_axis_sizes, mesh=None):
     """ITPP shard_map that inherits the partial-manual context mesh."""
     body = partial(itpp_decode_attention_shard, spec=spec,
                    mesh_axis_sizes=mesh_axis_sizes,
@@ -56,11 +57,11 @@ def _inner_itpp(spec: ItppSpec, max_pages_per_req: int, ring_width: int,
     axes = set(spec.page_axes)
     if b is not None:
         axes |= set(b) if isinstance(b, tuple) else {b}
-    return jax.shard_map(body, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=False, axis_names=axes)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False, axis_names=axes)
 
 
-def _inner_moe(cfg, tp_axis: str, tp_n: int, batch_axis):
+def _inner_moe(cfg, tp_axis: str, tp_n: int, batch_axis, mesh=None):
     def body(pw, x_loc):
         Bl, S, D = x_loc.shape
         y, aux = MOE.moe_ep(pw, cfg, x_loc.reshape(-1, D), tp_axis, tp_n)
@@ -74,8 +75,8 @@ def _inner_moe(cfg, tp_axis: str, tp_n: int, batch_axis):
         ps = dict(pspec)
         if "w3" in p:
             ps["w3"] = P(tp_axis, None, None)
-        fn = jax.shard_map(
-            body, in_specs=(ps, xspec), out_specs=(xspec, P()),
+        fn = shard_map(
+            body, mesh=mesh, in_specs=(ps, xspec), out_specs=(xspec, P()),
             check_vma=False,
             axis_names={tp_axis} | ({batch_axis} if batch_axis else set()))
         y, aux = fn({k: p[k] for k in ps}, x)
@@ -93,11 +94,12 @@ def make_pp_decode_step(cfg, plan, parallel, pool_spec, *, n_stages: int,
     ispec = plan.itpp_spec(parallel.page_size)
     # inside the manual-pod region the inner axes see the same sizes
     inner_sizes = {k: v for k, v in sizes.items() if k != "pod"}
+    inner_mesh = None if hasattr(jax, "shard_map") else mesh
     itpp_fn = _inner_itpp(ispec, pool_spec.max_pages_per_req,
                           pool_spec.max_pages_per_req if pool_spec.ring else 0,
-                          inner_sizes)
-    moe_fn = _inner_moe(cfg, plan.tp_axis, plan.tp, ispec.batch_axis) \
-        if cfg.is_moe else None
+                          inner_sizes, mesh=inner_mesh)
+    moe_fn = _inner_moe(cfg, plan.tp_axis, plan.tp, ispec.batch_axis,
+                        mesh=inner_mesh) if cfg.is_moe else None
     rt = MDL.Runtime(itpp=itpp_fn, moe=moe_fn,
                      ring_width=pool_spec.max_pages_per_req
                      if pool_spec.ring else 0)
@@ -180,9 +182,9 @@ def make_pp_decode_step(cfg, plan, parallel, pool_spec, *, n_stages: int,
     in_specs = (P("pod"), P(), P(), P(), P("pod"), P("pod"),
                 P(), P(), P(), P(), P())
     out_specs = (P(), P("pod"), P("pod"))
-    shmap = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False,
-                          axis_names={"pod"})
+    shmap = shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=False,
+                      axis_names={"pod"})
 
     def step(params, state, batch):
         sp = stack_stages(params["layers"], n_stages)

@@ -26,6 +26,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.itpp import ItppSpec, make_itpp_attention
+from repro.core.jax_compat import abstract_mesh as _abstract_mesh
+from repro.core.jax_compat import shard_map
 from repro.models.model import Runtime
 from repro.models import moe as MOE
 
@@ -35,6 +37,13 @@ STACKED_KEYS = {"layers", "enc", "dec", "mamba", "mlstm", "slstm"}
 COL_NAMES = {"wq", "wk", "wv", "w1", "w3", "wz", "wx", "wu", "wg"}
 ROW_NAMES = {"wo", "w2", "out_proj", "down"}
 REPLICATE_SMALL = 1 << 16
+
+
+def abstract_mesh(shape, axis_names):
+    """Version-portable ``jax.sharding.AbstractMesh`` constructor (tests and
+    dry-run tooling build meshes through this so plan invariants can be
+    checked without real devices)."""
+    return _abstract_mesh(shape, axis_names)
 
 
 def _path_keys(path) -> list[str]:
@@ -259,7 +268,7 @@ class Plan:
                      "w2": P(tp_axis, None, None)}
             if "w3" in p:
                 pspec["w3"] = P(tp_axis, None, None)
-            fn = jax.shard_map(
+            fn = shard_map(
                 body, mesh=mesh, in_specs=(pspec, xspec),
                 out_specs=(xspec, P()), check_vma=False)
             return fn({k: p[k] for k in pspec}, x)

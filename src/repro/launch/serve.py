@@ -5,8 +5,10 @@ cache over a LongBench-like request trace.
       --requests 16 --task musique --max-context 256
 
 Reports achieved average batch (the paper's Fig. 4(b) metric), token
-throughput, preemptions, and page-pool balance. ``--static`` switches to
-baseline-PIM static allocation for the comparison.
+throughput, host overhead, preemptions, and page-pool balance. ``--static``
+switches to baseline-PIM static allocation for the comparison;
+``--prefill-mode`` picks slot / batched / chunked prefill and
+``--sched-policy`` the admission policy (see repro.serving).
 """
 from __future__ import annotations
 
@@ -17,8 +19,34 @@ from dataclasses import replace
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core.engine import DecodeEngine, EngineConfig
 from repro.data.pipeline import request_trace
+from repro.serving import DecodeEngine, EngineConfig
+
+
+def build_engine(args) -> DecodeEngine:
+    cfg = replace(reduced(get_config(args.arch)), dtype="float32")
+    ecfg = EngineConfig(n_slots=args.slots, page_size=args.page,
+                        n_pages=args.pages, max_context=args.max_context,
+                        static_alloc=args.static, eos_token=-1,
+                        prefill_mode=args.prefill_mode,
+                        prefill_chunk=args.chunk,
+                        sched_policy=args.sched_policy)
+    return DecodeEngine(cfg, ecfg)
+
+
+def submit_trace(eng: DecodeEngine, args) -> None:
+    rng = np.random.default_rng(0)
+    # scale the LongBench length distribution into this toy max_context so
+    # its VARIABILITY survives (clamping would park every prompt at the cap,
+    # hiding exactly the effect DPA exploits — paper Table 2 / §5.4)
+    from repro.data.pipeline import LONGBENCH_STATS
+    factor = (args.max_context / 2) / LONGBENCH_STATS[args.task]["mean"]
+    trace = request_trace(args.task, args.requests, seed=0,
+                          mean_new_tokens=args.mean_new)
+    for i, (plen, new) in enumerate(trace):
+        plen = max(1, min(int(plen * factor),
+                          args.max_context - new - 1))
+        eng.submit(i, rng.integers(0, eng.cfg.vocab_size, size=plen), new)
 
 
 def main(argv=None):
@@ -33,35 +61,28 @@ def main(argv=None):
     ap.add_argument("--mean-new", type=int, default=24)
     ap.add_argument("--static", action="store_true")
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--prefill-mode", default="batched",
+                    choices=["slot", "batched", "chunked"])
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--sched-policy", default="fcfs",
+                    choices=["fcfs", "sjf", "memory_aware"])
     args = ap.parse_args(argv)
 
-    cfg = replace(reduced(get_config(args.arch)), dtype="float32")
-    ecfg = EngineConfig(n_slots=args.slots, page_size=args.page,
-                        n_pages=args.pages, max_context=args.max_context,
-                        static_alloc=args.static, eos_token=-1)
-    eng = DecodeEngine(cfg, ecfg)
-    rng = np.random.default_rng(0)
-    # scale the LongBench length distribution into this toy max_context so
-    # its VARIABILITY survives (clamping would park every prompt at the cap,
-    # hiding exactly the effect DPA exploits — paper Table 2 / §5.4)
-    from repro.data.pipeline import LONGBENCH_STATS
-    factor = (args.max_context / 2) / LONGBENCH_STATS[args.task]["mean"]
-    trace = request_trace(args.task, args.requests, seed=0,
-                          mean_new_tokens=args.mean_new)
-    for i, (plen, new) in enumerate(trace):
-        plen = max(1, min(int(plen * factor),
-                          args.max_context - new - 1))
-        eng.submit(i, rng.integers(0, cfg.vocab_size, size=plen), new)
+    eng = build_engine(args)
+    submit_trace(eng, args)
 
     t0 = time.time()
     eng.run(100_000)
     dt = time.time() - t0
     st = eng.batcher.stats
     toks = sum(len(v) for v in eng.outputs.values())
+    tm = eng.timing.as_dict()
     print(f"[serve] mode={'static' if args.static else 'lazy(DPA)'} "
+          f"prefill={eng.prefiller.name} policy={eng.batcher.policy.name} "
           f"completed={st.completed}/{args.requests} "
           f"avg_batch={st.avg_batch:.2f} preempted={st.preempted} "
-          f"tokens={toks} tok/s={toks / max(dt, 1e-9):.1f}", flush=True)
+          f"tokens={toks} tok/s={toks / max(dt, 1e-9):.1f} "
+          f"host_us/step={tm['host_us_per_step']:.0f}", flush=True)
     bal = eng.alloc.shard_balance()
     print(f"[serve] page balance per shard: max={bal.max()} min={bal.min()}",
           flush=True)

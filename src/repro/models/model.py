@@ -529,12 +529,15 @@ def decode_step(cfg, params, state, tokens, bt, ctx, npage, noff, *,
 # ---------------------------------------------------------------------------
 
 def prefill(cfg, params, state, tokens, bt, *, positions=None,
-            extra_embeds=None, frames=None, rt: Runtime = DEFAULT_RT):
+            extra_embeds=None, frames=None, last_idx=None, valid_len=None,
+            rt: Runtime = DEFAULT_RT):
     """Run the prompt through the model, writing KV pages / recurrent states.
 
-    Returns (fp32 logits of the LAST position [B, V], new_state). Assumes all
-    requests in the batch share prompt length S (the serving engine pads);
-    per-request lengths come in at decode via ctx.
+    Returns (fp32 logits of the LAST position [B, V], new_state). Requests in
+    the batch share the (padded) length S; for length-bucketed batched
+    prefill, ``last_idx`` [B] picks each request's true last position for the
+    logits and ``valid_len`` [B] masks pad-position pool writes (causal
+    attention already keeps end-padding out of the real positions' math).
     """
     from repro.core.paged_kv import write_prefill
     B, S = tokens.shape
@@ -578,7 +581,7 @@ def prefill(cfg, params, state, tokens, bt, *, positions=None,
                                      ctx_start=S - span,
                                      ring_width=rt.ring_width)
         else:
-            pkl, pvl = write_prefill(pkl, pvl, k, v, bt)
+            pkl, pvl = write_prefill(pkl, pvl, k, v, bt, valid_len=valid_len)
         kf = rt.constrain(k, "kv_full")
         vf = rt.constrain(v, "kv_full")
         a = L.flash_attention(q, kf, vf, causal=True, window=w)
@@ -665,7 +668,73 @@ def prefill(cfg, params, state, tokens, bt, *, positions=None,
         state["mamba"] = jax.tree.map(
             lambda *xs: jnp.concatenate(xs, 0), *new_mamba)
 
-    x = L.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    if last_idx is None:
+        x = x[:, -1]
+    else:
+        x = x[jnp.arange(x.shape[0]), jnp.asarray(last_idx, jnp.int32)]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = L.lm_head(x, w, transpose=cfg.tie_embeddings)
+    return logits, state
+
+
+def prefill_chunk(cfg, params, state, tokens, bt, ctx_start, *,
+                  last_idx=None, valid_len=None, rt: Runtime = DEFAULT_RT):
+    """Chunked prefill continuation — the DCS-style interleave primitive.
+
+    Processes tokens [B, C] at global positions ctx_start..ctx_start+C-1
+    against context already written to the paged pool by earlier chunks:
+    each layer writes the chunk's K/V via ``write_prefill(ctx_start=...)``,
+    gathers its pages, and attends with ``q_offset=ctx_start`` so the causal
+    mask spans prior chunks. ``ctx_start``/``last_idx``/``valid_len`` may be
+    traced, so one jit serves every chunk position.
+
+    Uniform-attention stacks only (``params["layers"]``, non-ring pools) —
+    recurrent/enc-dec families keep whole-prompt prefill. Returns (fp32
+    logits at last_idx (default C-1) [B, V], new_state).
+    """
+    from repro.core.paged_kv import gather_kv, write_prefill
+    assert "layers" in params and cfg.family != "encdec", \
+        "chunked prefill supports uniform attention stacks only"
+    B, C = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = rt.constrain(x, "act")
+    positions = default_positions(cfg, B, C, offset=ctx_start)
+    cs = _cos_sin(cfg, positions)
+    windows = jnp.asarray(_window_array(cfg))
+    pool = state["pool"]
+
+    # pool layers stream through the scan as xs/ys (same HBM-traffic argument
+    # as decode_step)
+    def body(h, xs):
+        lp, w, pkl, pvl = xs
+        hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], cfg, hn)
+        if cs is not None:
+            q = L.apply_rope(q, *cs)
+            k = L.apply_rope(k, *cs)
+        pkl, pvl = write_prefill(pkl, pvl, k, v, bt, ctx_start=ctx_start,
+                                 valid_len=valid_len)
+        kf, vf = gather_kv(pkl, pvl, bt)        # [B, maxp*page, KVH, D]
+        a = L.flash_attention(q, kf, vf, causal=True, window=w,
+                              q_offset=ctx_start)
+        h = h + L.dense(a.reshape(B, C, cfg.q_dim), lp["attn"]["wo"])
+        if "ln2" in lp:
+            h2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            y = (rt.moe_apply(lp["moe"], cfg, h2)[0] if "moe" in lp
+                 else L.mlp(lp["mlp"], h2, cfg.act))
+            h = h + y
+        return rt.constrain(h, "act"), (pkl, pvl)
+
+    x, (pk, pv) = jax.lax.scan(
+        body, x, (params["layers"], windows, pool["k"], pool["v"]))
+    state = dict(state)
+    state["pool"] = {"k": pk, "v": pv}
+    if last_idx is None:
+        x = x[:, -1]
+    else:
+        x = x[jnp.arange(B), jnp.asarray(last_idx, jnp.int32)]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     w = params["embed"] if cfg.tie_embeddings else params["head"]
     logits = L.lm_head(x, w, transpose=cfg.tie_embeddings)
     return logits, state

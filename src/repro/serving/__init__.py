@@ -1,0 +1,21 @@
+"""Layered serving subsystem (paper Fig. 2 host loop, split by concern).
+
+``engine`` orchestrates tick = schedule -> prefill -> decode -> sample;
+``prefill`` holds the slot / batched / chunked strategies; ``policies`` the
+pluggable admission policies; ``sampling`` the jitted samplers. See
+docs/serving.md for the mapping onto the paper's DCS/DPA mechanisms.
+"""
+from repro.serving.engine import DecodeEngine, EngineConfig, EngineTiming
+from repro.serving.policies import (FCFSPolicy, MemoryAwarePolicy,
+                                    SchedulingPolicy, SJFPolicy, make_policy)
+from repro.serving.prefill import (BatchedPrefiller, ChunkedPrefiller,
+                                   SlotPrefiller, make_prefiller)
+from repro.serving.sampling import Sampler, greedy_sample, make_sampler
+
+__all__ = [
+    "DecodeEngine", "EngineConfig", "EngineTiming",
+    "SchedulingPolicy", "FCFSPolicy", "SJFPolicy", "MemoryAwarePolicy",
+    "make_policy",
+    "SlotPrefiller", "BatchedPrefiller", "ChunkedPrefiller", "make_prefiller",
+    "Sampler", "greedy_sample", "make_sampler",
+]

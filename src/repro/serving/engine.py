@@ -1,0 +1,248 @@
+"""Decode engine: thin orchestration of tick = schedule -> prefill ->
+decode -> sample.
+
+The host loop mirrors the paper's Fig. 2(c): each iteration the host updates
+the "configuration buffer" (block tables, context lengths, write targets)
+and dispatches one compiled decode step; EOS requests release their pages
+and their slot refills from the queue (Fig. 2(b)). The layers are split so
+each is replaceable:
+
+* scheduling — ``core.scheduler.ContinuousBatcher`` with a pluggable
+  admission policy (``serving.policies``: FCFS / SJF / memory-aware);
+* prefill   — ``serving.prefill``: per-slot (seed), length-bucketed batched,
+  or chunked DCS-style interleave with decode;
+* sampling  — ``serving.sampling``: jitted greedy / temperature / top-k.
+
+Host bookkeeping (npage/noff/block-table assembly) is vectorized over the
+slot axis against the batcher's incrementally-maintained snapshots — the
+per-slot Python loops were the exact host-side bottleneck the paper's
+host loop avoids. Idle slots route their decode KV write to an
+out-of-bounds page so the scatter drops it (the seed pointed them at page
+0, which silently corrupted whichever live request owned it).
+
+This engine is the single-host functional version (used by tests, examples
+and the lazy-allocation benchmark); launch/serve.py wraps it with the mesh
+sharding plan for the production layout.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import PageAllocator
+from repro.core.paged_kv import PoolSpec
+from repro.core.scheduler import ContinuousBatcher, Request
+from repro.models import model as MDL
+from repro.serving.policies import make_policy
+from repro.serving.prefill import make_prefiller
+from repro.serving.sampling import make_sampler
+
+
+@dataclass
+class EngineConfig:
+    n_slots: int
+    page_size: int
+    n_pages: int
+    max_context: int
+    n_shards: int = 1
+    n_rows: int = 1
+    policy: str = "striped"           # page placement: striped | row_affine
+    static_alloc: bool = False        # baseline-PIM static max-ctx allocation
+    eos_token: int = 1
+    max_prefill: int = 64             # batched-prefill bucket cap
+    prefill_mode: str = "batched"     # slot | batched | chunked
+    prefill_chunk: int = 32           # tokens per chunk in chunked mode
+    sched_policy: str = "fcfs"        # fcfs | sjf | memory_aware
+    sampler: str = "greedy"           # greedy | temperature | top_k
+    temperature: float = 1.0
+    top_k: int = 0
+    sample_seed: int = 0
+
+
+@dataclass
+class EngineTiming:
+    """Wall-clock split of the serving loop (host bookkeeping vs device)."""
+    steps: int = 0
+    host_s: float = 0.0               # schedule + config-buffer assembly
+    prefill_s: float = 0.0
+    decode_s: float = 0.0             # compiled decode step + sampling
+
+    def as_dict(self) -> dict:
+        n = max(1, self.steps)
+        return {"steps": self.steps, "host_us_per_step": 1e6 * self.host_s / n,
+                "prefill_s": self.prefill_s, "decode_s": self.decode_s,
+                "host_s": self.host_s}
+
+
+class DecodeEngine:
+    def __init__(self, cfg, ecfg: EngineConfig, params=None, rt=None,
+                 *, sample: Callable | None = None, policy=None):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.rt = rt or MDL.DEFAULT_RT
+        self.params = params if params is not None else MDL.init_params(
+            cfg, jax.random.PRNGKey(0), jnp.float32)
+        kinds = cfg.block_kinds()
+        n_attn = cfg.n_layers if cfg.family == "encdec" else \
+            sum(1 for k in kinds if k in ("attn", "local"))
+        maxp = -(-ecfg.max_context // ecfg.page_size) + 1
+        self.pool_spec = PoolSpec(
+            max(n_attn, 1), ecfg.n_pages, ecfg.page_size, cfg.n_kv_heads,
+            cfg.d_head, maxp, dtype="float32")
+        static_pages = maxp if ecfg.static_alloc else None
+        self.alloc = PageAllocator(
+            ecfg.n_pages, ecfg.n_shards, ecfg.page_size, policy=ecfg.policy,
+            n_rows=ecfg.n_rows, static_max_pages=static_pages)
+        self.batcher = ContinuousBatcher(
+            self.alloc, ecfg.n_slots, max_context=ecfg.max_context,
+            n_rows=ecfg.n_rows, policy=make_policy(policy or ecfg.sched_policy),
+            bt_width=self.pool_spec.max_pages_per_req)
+        self.state = MDL.init_decode_state(cfg, self.pool_spec, ecfg.n_slots,
+                                           dtype="float32")
+        self.tokens = np.zeros((ecfg.n_slots,), np.int32)
+        self.prompts: dict[int, np.ndarray] = {}
+        self.outputs: dict[int, list[int]] = {}
+        # ``sample``: legacy per-row host callable (seed API); otherwise the
+        # jitted batch sampler from the config.
+        self.sample = sample
+        self.sampler = make_sampler(ecfg.sampler, temperature=ecfg.temperature,
+                                    top_k=ecfg.top_k, seed=ecfg.sample_seed)
+        # batched/chunked prefill keep the whole decode state in the shared
+        # pool; recurrent and enc-dec families need per-slot state merges,
+        # and ring / sharded-writer runtimes use prefill branches that
+        # ignore valid_len (pad-write masking) — all of those stay on the
+        # slot path.
+        self.batchable = "layers" in self.params and cfg.family != "encdec" \
+            and not self.rt.ring_width and self.rt.write_pool is None
+        self.chunkable = self.batchable
+        self.prefiller = make_prefiller(ecfg.prefill_mode, self)
+        self.timing = EngineTiming()
+        self._decode_jit = None
+        self._slot_ids = np.arange(ecfg.n_slots)
+
+    # ------------------------------------------------------------------
+    def submit(self, req_id: int, prompt: np.ndarray,
+               max_new_tokens: int) -> None:
+        self.prompts[req_id] = np.asarray(prompt, np.int32)
+        self.outputs[req_id] = []
+        req = Request(req_id, len(prompt), max_new_tokens)
+        if self.prefiller.name == "chunked":
+            req.chunked_prefill = True
+            req.prefill_done = False
+        self.batcher.submit(req)
+
+    # ---- helpers shared with the prefillers ---------------------------
+    def _prompt_seq(self, req) -> tuple[np.ndarray, bool]:
+        """Token sequence to prefill and whether a first token should be
+        emitted. After a preemption the re-prefill covers the original
+        prompt plus every generated token except the last sampled one
+        (whose KV was never written; it re-enters as the next decode
+        input)."""
+        prompt = self.prompts[req.req_id]
+        out = self.outputs[req.req_id]
+        if req.prompt_len == len(prompt):
+            return prompt, True
+        return np.concatenate(
+            [prompt, np.asarray(out[:-1], np.int32)])[:req.prompt_len], False
+
+    def _emit_first(self, slot: int, req, logits_row: np.ndarray,
+                    emit: bool) -> None:
+        if emit:
+            tok = int(self._sample_one(logits_row))
+            self.tokens[slot] = tok
+            self.outputs[req.req_id].append(tok)
+        else:
+            self.tokens[slot] = self.outputs[req.req_id][-1]
+
+    def _sample_one(self, logits_row) -> int:
+        if self.sample is not None:
+            return int(self.sample(np.asarray(logits_row)))
+        return int(self.sampler(logits_row))
+
+    def _sample_rows(self, logits) -> np.ndarray:
+        """[B, V] -> [B] int32, one device call for the whole batch (legacy
+        per-row callables keep per-row semantics)."""
+        if self.sample is not None:
+            return np.asarray([self.sample(row) for row in np.asarray(logits)],
+                              np.int32)
+        return np.asarray(self.sampler(logits), np.int32)
+
+    # ------------------------------------------------------------------
+    def step(self, finished_mask=None):
+        """One engine tick: schedule -> prefill -> decode -> sample."""
+        E = self.ecfg
+        t0 = time.perf_counter()
+        admitted, active = self.batcher.step(finished_mask)
+        t1 = time.perf_counter()
+        self.timing.host_s += t1 - t0
+        if admitted or self.prefiller.busy:
+            active = self.prefiller.run(admitted, active)
+            t2 = time.perf_counter()
+            self.timing.prefill_s += t2 - t1
+        self.timing.steps += 1
+        if not active:
+            return np.zeros((E.n_slots,), bool)
+
+        # ---- config-buffer assembly, vectorized over slots ------------
+        t3 = time.perf_counter()
+        ctx = self.batcher.context_lens()
+        bt = self.batcher.block_tables(self.pool_spec.max_pages_per_req)
+        W = self.pool_spec.max_pages_per_req
+        active_mask = np.zeros((E.n_slots,), bool)
+        active_mask[active] = True
+        t = ctx - 1                    # slot of the token being written
+        vp = np.clip(t, 0, None) // E.page_size
+        if self.rt.ring_width:
+            vp = vp % self.rt.ring_width
+        # idle slots target page n_pages (out of bounds) -> scatter drops
+        npage = np.where(active_mask,
+                         bt[self._slot_ids, np.minimum(vp, W - 1)],
+                         E.n_pages).astype(np.int32)
+        noff = np.where(active_mask, np.clip(t, 0, None) % E.page_size,
+                        0).astype(np.int32)
+        if self._decode_jit is None:
+            def fn(params, state, tokens, bt, ctx, npage, noff):
+                return MDL.decode_step(self.cfg, params, state, tokens, bt,
+                                       ctx, npage, noff, rt=self.rt)
+            self._decode_jit = jax.jit(fn)
+        t4 = time.perf_counter()
+        self.timing.host_s += t4 - t3
+
+        logits, self.state = self._decode_jit(
+            self.params, self.state, jnp.asarray(self.tokens),
+            jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(npage),
+            jnp.asarray(noff))
+        logits = np.asarray(logits)
+        if self.sample is not None:    # legacy per-row callable: active only
+            nxt = np.zeros((E.n_slots,), np.int32)
+            for s in active:
+                nxt[s] = int(self.sample(logits[s]))
+        else:
+            nxt = self._sample_rows(logits)
+        t5 = time.perf_counter()
+        self.timing.decode_s += t5 - t4
+
+        # ---- EOS / budget bookkeeping, vectorized ----------------------
+        gen = np.asarray([0 if r is None else r.generated
+                          for r in self.batcher.slots], np.int32)
+        budget = np.asarray([1 if r is None else r.max_new_tokens
+                             for r in self.batcher.slots], np.int32)
+        self.tokens = np.where(active_mask, nxt, self.tokens).astype(np.int32)
+        finished = active_mask & ((nxt == E.eos_token) | (gen >= budget))
+        for s in active:
+            self.outputs[self.batcher.slots[s].req_id].append(int(nxt[s]))
+        self.timing.host_s += time.perf_counter() - t5
+        return finished
+
+    def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        finished = None
+        for _ in range(max_steps):
+            if self.batcher.done():
+                break
+            finished = self.step(finished)
+        return self.outputs

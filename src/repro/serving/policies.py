@@ -1,0 +1,127 @@
+"""Pluggable admission/scheduling policies for the continuous batcher.
+
+The seed batcher hard-coded a strict head-of-line FCFS scan; the paper's
+host loop (Fig. 2) co-designs scheduling with the DPA allocator, so the
+policy is now a plug-in point on ``core.scheduler.ContinuousBatcher``.
+
+Contract: ``select(batcher, row)`` is called once per open slot and returns
+the index into ``batcher.queue`` of the request to admit, or None to leave
+the slot empty this tick. A policy must only return requests that pass
+``batcher.alloc.can_admit`` — the batcher admits whatever the policy picks.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import pim_model as PM
+
+
+class SchedulingPolicy:
+    name = "base"
+
+    def select(self, batcher, row: int | None = None) -> int | None:
+        raise NotImplementedError
+
+    def _admissible(self, batcher, row):
+        for i, req in enumerate(batcher.queue):
+            if batcher.alloc.can_admit(req.prompt_len, row):
+                yield i, req
+
+
+class FCFSPolicy(SchedulingPolicy):
+    """First-come-first-served with strict head-of-line blocking (the seed
+    behavior): if the oldest request doesn't fit, nothing is admitted."""
+    name = "fcfs"
+
+    def select(self, batcher, row=None):
+        q = batcher.queue
+        if q and batcher.alloc.can_admit(q[0].prompt_len, row):
+            return 0
+        return None
+
+
+class SJFPolicy(SchedulingPolicy):
+    """Shortest-job-first: admit the admissible request with the smallest
+    expected footprint. ``by='prompt'`` ranks on prompt length alone,
+    ``by='total'`` on prompt + token budget (expected lifetime). Ties break
+    FCFS (earlier arrival wins)."""
+    name = "sjf"
+
+    def __init__(self, by: str = "total"):
+        assert by in ("prompt", "total"), by
+        self.by = by
+
+    def _size(self, req) -> int:
+        return req.prompt_len if self.by == "prompt" \
+            else req.prompt_len + req.max_new_tokens
+
+    def select(self, batcher, row=None):
+        best, best_size = None, math.inf
+        for i, req in self._admissible(batcher, row):
+            if self._size(req) < best_size:
+                best, best_size = i, self._size(req)
+        return best
+
+
+class MemoryAwarePolicy(SchedulingPolicy):
+    """Admission control against request *lifetime* footprint, ranked by the
+    analytic decode cost model (``core.pim_model.decode_latency``).
+
+    A request is admissible only if pages for prompt + max_new_tokens fit
+    the free pool with ``headroom_pages`` spare — unlike FCFS, which admits
+    on prompt footprint alone and pays for it with mid-decode preemptions
+    (the re-prefill the paper's DPA is designed to amortize away). Among
+    admissible candidates the policy picks the one the cost model says
+    yields the lowest per-token decode latency at the resulting batch.
+
+    When the system is idle and no candidate passes the lifetime check, the
+    policy degrades to FCFS admission so a single oversized request cannot
+    livelock the queue (it will run under preemption, as the seed did).
+    """
+    name = "memory_aware"
+
+    def __init__(self, system: PM.System | None = None,
+                 model: PM.LLM | None = None, headroom_pages: int = 0):
+        self.system = system or PM.System(PM.PIM_NODE, n_nodes=1, itpp=True,
+                                          dpa=True, pingpong=True)
+        self.model = model or PM.QWEN_7B
+        self.headroom = headroom_pages
+
+    def _lifetime_pages(self, alloc, req) -> int:
+        return -(-(req.prompt_len + req.max_new_tokens) // alloc.page_size)
+
+    def _cost(self, batcher, req) -> float:
+        """Modelled seconds/token if ``req`` joins the current batch."""
+        ctxs = [r.total_len for r in batcher.slots if r is not None]
+        B = len(ctxs) + 1
+        avg = (sum(ctxs) + req.prompt_len + req.max_new_tokens) / B
+        return PM.decode_latency(self.system, self.model, B,
+                                 max(avg, 1.0))["t_step"] / B
+
+    def select(self, batcher, row=None):
+        alloc = batcher.alloc
+        free = alloc.free_pages_in_row(row) if row is not None \
+            else alloc.free_page_count
+        best, best_cost = None, math.inf
+        fallback = None
+        for i, req in self._admissible(batcher, row):
+            if fallback is None:
+                fallback = i
+            if self._lifetime_pages(alloc, req) + self.headroom > free:
+                continue                    # would preempt mid-decode: refuse
+            cost = self._cost(batcher, req)
+            if cost < best_cost:
+                best, best_cost = i, cost
+        if best is None and fallback is not None \
+                and all(r is None for r in batcher.slots):
+            return fallback                 # idle system: degrade to FCFS
+        return best
+
+
+def make_policy(name, **kw) -> SchedulingPolicy:
+    """Resolve a policy by name ('fcfs' | 'sjf' | 'memory_aware') or pass a
+    SchedulingPolicy instance through."""
+    if isinstance(name, SchedulingPolicy):
+        return name
+    return {"fcfs": FCFSPolicy, "sjf": SJFPolicy,
+            "memory_aware": MemoryAwarePolicy}[name](**kw)

@@ -1,0 +1,213 @@
+"""Prefill strategies for the serving engine.
+
+Three ways to get an admitted prompt into the paged pool:
+
+* ``slot`` — the seed path: one batch-1 ``MDL.prefill`` per admitted
+  request, recurrent/enc-dec states merged into the engine state. Works for
+  every architecture family; pays one dispatch (and one compile per prompt
+  length) per request.
+* ``batched`` — length-bucketed batched prefill: all requests admitted in a
+  tick are grouped into padded-length buckets and each bucket runs under ONE
+  jitted call (``last_idx`` picks each request's true last position,
+  ``valid_len`` masks pad writes). Uniform-attention stacks only (the
+  decode state is just the shared pool); other families fall back to slot.
+* ``chunked`` — DCS-style interleave: prompts are cut into fixed-size
+  chunks and one chunk per prefilling slot runs per engine tick, between
+  decode steps, via ``MDL.prefill_chunk`` (``write_prefill(ctx_start=...)``
+  + gathered-pool attention). Decode latency for running requests stays
+  bounded by the chunk, not the longest admitted prompt — the scheduling
+  overlap the paper's DCS gets by pipelining data movement with compute.
+
+``make_prefiller`` picks the implementation and silently degrades to
+``slot`` when the engine's model family can't support the requested mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as MDL
+
+
+def _make_batched_fn(cfg, rt):
+    def fn(params, pool, tokens, bt, last_idx, valid_len):
+        logits, state = MDL.prefill(cfg, params, {"pool": pool}, tokens, bt,
+                                    last_idx=last_idx, valid_len=valid_len,
+                                    rt=rt)
+        return logits, state["pool"]
+    return jax.jit(fn)
+
+
+def _make_chunk_fn(cfg, rt):
+    def fn(params, pool, tokens, bt, ctx_start, last_idx, valid_len):
+        logits, state = MDL.prefill_chunk(cfg, params, {"pool": pool},
+                                          tokens, bt, ctx_start,
+                                          last_idx=last_idx,
+                                          valid_len=valid_len, rt=rt)
+        return logits, state["pool"]
+    return jax.jit(fn)
+
+
+class SlotPrefiller:
+    """Per-request whole-prompt prefill (seed semantics)."""
+    name = "slot"
+
+    def __init__(self, engine):
+        self.eng = engine
+
+    @property
+    def busy(self) -> bool:
+        return False
+
+    def run(self, admitted, active):
+        for slot, req in admitted:
+            self._prefill_slot(slot, req)
+        return active
+
+    def _prefill_slot(self, slot: int, req) -> None:
+        """Run the prompt through the model into this slot's pages.
+
+        The functional prefill writes whole-batch; for slot-wise admission we
+        run a batch-1 prefill and merge its cache rows into the engine state.
+        """
+        eng = self.eng
+        req.generated = 1              # prefill emits the first token
+        prompt, emit = eng._prompt_seq(req)
+        bt = eng.batcher.block_table_row(slot)
+        state1 = MDL.init_decode_state(eng.cfg, eng.pool_spec, 1,
+                                       dtype="float32")
+        # share the pool so pages written land in the engine pool
+        if "pool" in eng.state:
+            state1["pool"] = eng.state["pool"]
+        logits, state1 = MDL.prefill(
+            eng.cfg, eng.params, state1, jnp.asarray(prompt[None]),
+            jnp.asarray(bt[None]), rt=eng.rt,
+            frames=(jnp.zeros((1, eng.cfg.enc_seq, eng.cfg.d_model),
+                              jnp.float32)
+                    if eng.cfg.family == "encdec" else None))
+        if "pool" in eng.state:
+            eng.state["pool"] = state1["pool"]
+        for key in ("mamba", "mlstm", "slstm", "cross_k", "cross_v"):
+            if key in eng.state:
+                def put(dst, src):
+                    return dst.at[:, slot].set(src[:, 0])
+                eng.state[key] = jax.tree.map(put, eng.state[key],
+                                              state1[key])
+        eng._emit_first(slot, req, np.asarray(logits)[0], emit)
+
+
+class BatchedPrefiller:
+    """Length-bucketed batched prefill: every bucket is one jitted call."""
+    name = "batched"
+
+    def __init__(self, engine):
+        self.eng = engine
+        self._fn = _make_batched_fn(engine.cfg, engine.rt)
+
+    @property
+    def busy(self) -> bool:
+        return False
+
+    def _bucket(self, n: int) -> int:
+        cap = max(8, self.eng.ecfg.max_prefill)
+        b = 8
+        while b < n and b < cap:
+            b *= 2
+        return b if b >= n else -(-n // cap) * cap
+
+    def run(self, admitted, active):
+        eng = self.eng
+        if not admitted:
+            return active
+        groups: dict[int, list] = {}
+        fresh: dict[int, bool] = {}
+        for slot, req in admitted:
+            seq, emit = eng._prompt_seq(req)
+            groups.setdefault(self._bucket(len(seq)), []).append(
+                (slot, req, seq))
+            fresh[slot] = emit
+        for blen in sorted(groups):
+            grp = groups[blen]
+            toks = np.zeros((len(grp), blen), np.int32)
+            lens = np.zeros((len(grp),), np.int32)
+            for i, (_, _, seq) in enumerate(grp):
+                toks[i, :len(seq)] = seq
+                lens[i] = len(seq)
+            bts = np.stack([eng.batcher.block_table_row(slot)
+                            for slot, _, _ in grp])
+            logits, pool = self._fn(
+                eng.params, eng.state["pool"], jnp.asarray(toks),
+                jnp.asarray(bts), jnp.asarray(lens - 1), jnp.asarray(lens))
+            eng.state["pool"] = pool
+            logits = np.asarray(logits)
+            for i, (slot, req, _) in enumerate(grp):
+                req.generated = 1
+                eng._emit_first(slot, req, logits[i], fresh[slot])
+        return active
+
+
+class ChunkedPrefiller:
+    """Fixed-size chunk per prefilling slot per tick, interleaved with
+    decode. Slots finishing their last chunk join this tick's decode batch
+    (same (generated, ctx) trajectory as the seed's admission-tick decode,
+    so greedy outputs are token-identical)."""
+    name = "chunked"
+
+    def __init__(self, engine):
+        self.eng = engine
+        self._fn = _make_chunk_fn(engine.cfg, engine.rt)
+        self._pos: dict[int, int] = {}      # slot -> next ctx_start
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._pos)
+
+    def run(self, admitted, active):
+        eng = self.eng
+        for slot, _ in admitted:
+            self._pos[slot] = 0
+        if not self._pos:
+            return active
+        C = max(1, eng.ecfg.prefill_chunk)
+        completed = []
+        for slot in sorted(self._pos):
+            req = eng.batcher.slots[slot]
+            if req is None or req.prefill_done:
+                # slot freed or preempted out from under a mid-prefill
+                # request; its re-admission re-registers from chunk 0
+                del self._pos[slot]
+                continue
+            prompt, emit = eng._prompt_seq(req)
+            start = self._pos[slot]
+            valid = min(C, len(prompt) - start)
+            chunk = np.zeros((1, C), np.int32)
+            chunk[0, :valid] = prompt[start:start + valid]
+            bt = eng.batcher.block_table_row(slot)[None]
+            logits, pool = self._fn(
+                eng.params, eng.state["pool"], jnp.asarray(chunk),
+                jnp.asarray(bt), jnp.int32(start),
+                jnp.asarray([valid - 1], jnp.int32),
+                jnp.asarray([valid], jnp.int32))
+            eng.state["pool"] = pool
+            self._pos[slot] = start + valid
+            if self._pos[slot] >= len(prompt):
+                del self._pos[slot]
+                req.generated = 1
+                if eng.batcher.mark_prefill_done(slot):
+                    eng._emit_first(slot, req, np.asarray(logits)[0], emit)
+                    completed.append(slot)
+                # else: pool exhausted at the finish line — the batcher
+                # preempted and requeued the bare prompt
+        return sorted(set(active) | set(completed)) if completed else active
+
+
+def make_prefiller(mode: str, engine):
+    """'slot' | 'batched' | 'chunked', degrading to 'slot' when the model
+    family doesn't support the batched/chunked pool-only path."""
+    if mode == "batched" and engine.batchable:
+        return BatchedPrefiller(engine)
+    if mode == "chunked" and engine.chunkable:
+        return ChunkedPrefiller(engine)
+    assert mode in ("slot", "batched", "chunked"), mode
+    return SlotPrefiller(engine)

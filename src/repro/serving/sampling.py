@@ -1,0 +1,70 @@
+"""Jitted token samplers for the serving engine.
+
+The seed engine sampled on the host with ``np.argmax`` per slot; these run
+the whole batch in one compiled call (greedy argmax, temperature, top-k) so
+sampling rides the same dispatch as the decode step instead of adding a
+per-slot Python loop. Stochastic samplers hold a PRNG-key chain seeded at
+construction: the same seed and call sequence reproduce the same tokens.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def greedy_sample(logits):
+    """logits [..., V] -> int32 token ids [...] (first-max tie-break, same
+    as np.argmax)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("top_k",))
+def stochastic_sample(key, logits, temperature=1.0, top_k: int = 0):
+    """Temperature / top-k sampling. top_k=0 samples the full distribution."""
+    logits = logits / jnp.maximum(jnp.asarray(temperature, logits.dtype), 1e-6)
+    if top_k:
+        vals, idx = jax.lax.top_k(logits, top_k)
+        draw = jax.random.categorical(key, vals, axis=-1)
+        return jnp.take_along_axis(
+            idx, draw[..., None], axis=-1)[..., 0].astype(jnp.int32)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+class Sampler:
+    """Stateful batch sampler: ``sampler(logits)`` -> np.int32 tokens.
+
+    Accepts [V] or [B, V] logits (np or jnp). Greedy is stateless;
+    temperature/top_k split one key per call, so token streams are
+    deterministic in (seed, call order).
+    """
+
+    def __init__(self, kind: str = "greedy", *, temperature: float = 1.0,
+                 top_k: int = 0, seed: int = 0):
+        assert kind in ("greedy", "temperature", "top_k"), kind
+        self.kind = kind
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._key = jax.random.PRNGKey(seed)
+
+    def __call__(self, logits) -> np.ndarray:
+        logits = jnp.asarray(logits)
+        squeeze = logits.ndim == 1
+        if squeeze:
+            logits = logits[None]
+        if self.kind == "greedy":
+            out = greedy_sample(logits)
+        else:
+            self._key, sub = jax.random.split(self._key)
+            out = stochastic_sample(sub, logits, self.temperature,
+                                    self.top_k if self.kind == "top_k" else 0)
+        out = np.asarray(out)
+        return out[0] if squeeze else out
+
+
+def make_sampler(kind: str = "greedy", *, temperature: float = 1.0,
+                 top_k: int = 0, seed: int = 0) -> Sampler:
+    return Sampler(kind, temperature=temperature, top_k=top_k, seed=seed)

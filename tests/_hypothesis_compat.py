@@ -1,0 +1,94 @@
+"""Minimal example-based stand-in for ``hypothesis`` when it isn't installed.
+
+Covers exactly the surface this suite uses — ``@settings(max_examples=...,
+deadline=...)``, ``@given(st.data())`` / ``@given(k=strategy, ...)`` and the
+``data``, ``integers``, ``sampled_from``, ``lists``, ``booleans``
+strategies. Each property runs ``max_examples`` times against a
+deterministic per-example seeded ``random.Random`` (seed derived from the
+test name), so failures reproduce. No shrinking, no database — install
+hypothesis for the real thing; test modules import this as a fallback only.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int | None = None) -> _Strategy:
+    hi = max_size if max_size is not None else min_size + 10
+    return _Strategy(lambda rng: [elements._sample(rng)
+                                  for _ in range(rng.randint(min_size, hi))])
+
+
+class _Data:
+    """Interactive draws, mirroring ``st.data()``'s DataObject."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy._sample(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(None)          # sentinel; given() builds the _Data
+
+
+strategies = types.SimpleNamespace(
+    data=data, integers=integers, sampled_from=sampled_from, lists=lists,
+    booleans=booleans)
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    interactive = bool(arg_strategies)      # the @given(st.data()) form
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            # @settings sits ABOVE @given, so it tags this wrapper;
+            # read at call time.
+            n = getattr(runner, "_max_examples", 20)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random(base + 1_000_003 * i)
+                if interactive:
+                    fn(_Data(rng), *args, **kwargs)
+                else:
+                    drawn = {k: s._sample(rng)
+                             for k, s in kw_strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+        # pytest must not mistake the property's arguments for fixtures:
+        # hide the wrapped function and present a zero-arg signature
+        del runner.__wrapped__
+        runner.__signature__ = inspect.Signature()
+        return runner
+    return deco

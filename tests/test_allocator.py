@@ -1,7 +1,10 @@
 """Property tests for the DPA allocator (Va2Pa bookkeeping invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # graceful fallback: example-based driver
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.allocator import PageAllocator
 

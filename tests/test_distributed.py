@@ -17,6 +17,7 @@ def run_devprog(body: str, n_dev: int = 8):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
         import jax, jax.numpy as jnp, numpy as np
         jax.config.update("jax_platform_name", "cpu")
+        from repro.core.jax_compat import make_mesh, shard_map
         {textwrap.indent(textwrap.dedent(body), '        ').strip()}
         print("SUBPROC_OK")
     """)
@@ -51,8 +52,7 @@ def test_itpp_sharded_matches_oracle():
         noff = jnp.asarray(ctx_prev % page)
         pk_ref, pv_ref = PK.write_token(pool_k, pool_v, k_new, v_new, npage, noff)
         ref = PK.paged_decode_attention_ref(q, pk_ref, pv_ref, bt, ctx)
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         spec = IT.ItppSpec(("model",), ("model",), None, 8, 8, page)
         f = IT.make_itpp_attention(mesh, spec, max_pages_per_req=maxp)
         out, pk, pv = jax.jit(f)(q, k_new, v_new, pool_k, pool_v, bt, ctx,
@@ -75,18 +75,17 @@ def test_moe_ep_matches_local():
         p = M.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32, n_virtual=V)
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
         y_local, aux_l = M.moe_local(p, cfg, x)
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         def body(pw, x_loc):
             B, S, D = x_loc.shape
             y, aux = M.moe_ep(pw, cfg, x_loc.reshape(-1, D), "model", 8)
             return y.reshape(B, S, D), jax.lax.pmean(aux, "model")
         pspec = {"router": P(None, None), "w1": P("model", None, None),
                  "w2": P("model", None, None), "w3": P("model", None, None)}
-        f = jax.shard_map(body, mesh=mesh,
-                          in_specs=(pspec, P(None, "model", None)),
-                          out_specs=(P(None, "model", None), P()),
-                          check_vma=False)
+        f = shard_map(body, mesh=mesh,
+                      in_specs=(pspec, P(None, "model", None)),
+                      out_specs=(P(None, "model", None), P()),
+                      check_vma=False)
         y_ep, aux_e = jax.jit(f)({k: p[k] for k in pspec}, x)
         err = np.abs(np.asarray(y_ep) - np.asarray(y_local)).max()
         assert err < 1e-4, err
@@ -116,8 +115,7 @@ def test_long_context_single_request_spans_all_shards():
         noff = jnp.asarray([ctx_prev % page])
         pk_ref, pv_ref = PK.write_token(pool_k, pool_v, k_new, v_new, npage, noff)
         ref = PK.paged_decode_attention_ref(q, pk_ref, pv_ref, bt, ctx)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         spec = IT.ItppSpec(("data", "model"), ("data", "model"), None, 8, 8, page)
         f = IT.make_itpp_attention(mesh, spec, max_pages_per_req=maxp)
         out, _, _ = jax.jit(f)(q, k_new, v_new, pool_k, pool_v, bt, ctx,
@@ -153,8 +151,7 @@ def test_sharded_prefill_writer_matches_global():
         pool_k = jnp.zeros((32, page, KVH, D))
         pool_v = jnp.zeros((32, page, KVH, D))
         ref_k, ref_v = PK.write_prefill(pool_k, pool_v, k, v, bt)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         spec = IT.ItppSpec(("data", "model"), ("model",), "data", 8, 4, page)
         writer = IT.make_prefill_writer(mesh, spec, seq_axis="model")
         out_k, out_v = jax.jit(writer)(pool_k, pool_v, k, v, bt)
@@ -164,6 +161,10 @@ def test_sharded_prefill_writer_matches_global():
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(not hasattr(__import__("jax"), "shard_map"),
+                    reason="nested partial-manual shard_map needs the "
+                           "jax>=0.5 shard_map; 0.4.x SPMD partitioning "
+                           "rejects PartitionId inside the manual region")
 def test_pp_decode_matches_forward():
     """GPipe decode over the pod axis (nested ITPP+TP inside partial-manual
     shard_map) must equal the plain full-sequence forward."""
@@ -182,8 +183,7 @@ def test_pp_decode_matches_forward():
         toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
                                   cfg.vocab_size)
         logits_ref, _ = MDL.forward(cfg, params, toks)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         shape = ShapeConfig("d", "decode", S, B)
         parallel = ParallelConfig(dp=2, tp=2, pods=2, page_size=page)
         plan = make_plan(mesh, parallel, shape, pod_mode="pp")
@@ -236,8 +236,7 @@ def test_train_step_sharded_matches_single_device():
         opt_cfg = OPT.AdamWConfig(lr=1e-3)
         ref_step = jax.jit(make_train_step(cfg, MDL.DEFAULT_RT, opt_cfg))
         p_ref, _, m_ref = ref_step(params, OPT.init(params), batch)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         shp = ShapeConfig("t", "train", S, B)
         plan = make_plan(mesh, ParallelConfig(dp=2, tp=4), shp)
         rt = plan.make_runtime(cfg, ParallelConfig(remat=False), mode="train")

@@ -1,6 +1,9 @@
 """PIM cost-model properties + paper-claim tolerances."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # graceful fallback: example-based driver
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import pim_model as PM
 

@@ -1,6 +1,9 @@
 """Scheduler properties: conservation, lazy>=static batch, preemption."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # graceful fallback: example-based driver
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.allocator import PageAllocator
 from repro.core.scheduler import ContinuousBatcher, Request

@@ -5,17 +5,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED, SHAPES, ParallelConfig, get_config
+from repro.distributed.sharding import abstract_mesh as make_abstract_mesh
 from repro.distributed.sharding import make_plan
 from repro.models import model as MDL
 
 
 def abstract_mesh(multi_pod):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ASSIGNED)

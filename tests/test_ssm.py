@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # graceful fallback: example-based driver
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.models import ssm as S
 
