@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Figure/table mapping:
   kernel_*  Table 6    kernel-vs-oracle validation (kernel_bench.py)
   serving_* host loop  prefill-mode throughput + host overhead
                        (serving_bench.py — slot vs batched vs chunked)
+  kvcache_* hierarchy  radix prefix sharing TTFT/pages sweep + host
+                       offload tier (kvcache_bench.py — repro.kvcache)
 """
 from __future__ import annotations
 
@@ -19,9 +21,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (io_overlap, kernel_bench, latency_breakdown,
-                            lazy_alloc, serving_bench, throughput_scaling,
-                            tp_pp_ablation, utilization)
+    from benchmarks import (io_overlap, kernel_bench, kvcache_bench,
+                            latency_breakdown, lazy_alloc, serving_bench,
+                            throughput_scaling, tp_pp_ablation, utilization)
 
     rows: list[tuple[str, float, str]] = []
 
@@ -32,7 +34,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     for mod in (throughput_scaling, tp_pp_ablation, lazy_alloc, io_overlap,
-                latency_breakdown, utilization, kernel_bench, serving_bench):
+                latency_breakdown, utilization, kernel_bench, serving_bench,
+                kvcache_bench):
         try:
             mod.run(emit)
         except Exception as e:  # noqa: BLE001

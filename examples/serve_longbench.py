@@ -1,6 +1,8 @@
 """Serving scenario: continuous batching over a LongBench-statistics trace,
 lazy (DPA) vs static allocation — the paper's §5.4 experiment end to end —
-plus the chunked-prefill (DCS-style) overlap on the lazy configuration.
+plus the chunked-prefill (DCS-style) overlap and the KV-cache hierarchy
+(radix prefix sharing + host offload, repro.kvcache) on a shared
+system-prompt workload.
 
   PYTHONPATH=src python examples/serve_longbench.py
 """
@@ -21,3 +23,17 @@ if __name__ == "__main__":
           f"in the memory-constrained regime)")
     print("=== lazy + chunked prefill (DCS-style overlap) ===")
     serve_main(common + ["--prefill-mode", "chunked", "--chunk", "16"])
+
+    # multi-tenant shared-system-prompt traffic: 90% of every prompt is the
+    # same system prefix. With the prefix cache the engine prefills it once
+    # and later admissions borrow the pages (prefill O(suffix)); the host
+    # tier keeps evicted prefixes one swap away instead of recomputing.
+    shared = ["--requests", "10", "--slots", "6", "--page", "8",
+              "--pages", "72", "--max-context", "256", "--mean-new", "10",
+              "--shared-frac", "0.9"]
+    print("\n=== shared system prompt, no sharing (baseline) ===")
+    serve_main(shared)
+    print("=== shared system prompt + radix prefix cache ===")
+    serve_main(shared + ["--prefix-cache"])
+    print("=== + host offload tier (64 host pages) ===")
+    serve_main(shared + ["--prefix-cache", "--host-pages", "64"])

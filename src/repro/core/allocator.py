@@ -10,6 +10,15 @@ mesh shards; the allocator hands out page ids so that
   (decode batches sharded over the ``data`` axis), while ``striped`` uses the
   whole pod (long-context, batch=1).
 
+Pages are **refcounted** so the prefix cache (``repro.kvcache``) can share
+physical pages across requests and keep finished requests' KV alive in its
+radix tree: ``admit_shared`` registers a request whose leading pages are
+borrowed references, ``incref``/``decref`` manage extra owners, and a page
+only returns to the free lists when its last owner lets go. A pluggable
+``reclaimer`` hook (the cache) is consulted when the pool runs dry — cold
+cached pages are evicted/offloaded on demand, and ``available_pages`` counts
+them as admission capacity.
+
 Pure numpy/host code — this runs in the serving loop between device steps,
 exactly like the paper's host updating the Va2Pa table each iteration.
 """
@@ -55,6 +64,12 @@ class PageAllocator:
         self._tables: dict[int, list[int]] = {}   # req -> Va2Pa (virtual order)
         self._rr: dict[int, int] = {}             # req -> round-robin cursor
         self._row: dict[int, int] = {}
+        self._refs: dict[int, int] = {}           # page -> owner count (>0)
+        # reclaimer: object with ``reclaimable() -> int`` and
+        # ``reclaim(n) -> int`` (pages actually freed). Set by the prefix
+        # cache; consulted on exhaustion before raising MemoryError and when
+        # counting admission capacity.
+        self.reclaimer = None
 
     # ------------------------------------------------------------------
     def shard_of(self, page: int) -> int:
@@ -75,6 +90,24 @@ class PageAllocator:
     def free_page_count(self) -> int:
         return sum(len(f) for f in self._free)
 
+    def available_pages(self, row: int | None = None) -> int:
+        """Admission capacity: free pages plus whatever the reclaimer could
+        evict on demand (cold cached pages). Row-affine counts only the
+        row's free pages plus the global reclaimable pool (reclaim does not
+        target a specific row, so this is an optimistic bound)."""
+        free = self.free_pages_in_row(row) if row is not None \
+            else self.free_page_count
+        if self.reclaimer is not None:
+            free += self.reclaimer.reclaimable()
+        return free
+
+    def ref_of(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def pages_of(self, req: int) -> list[int]:
+        """The request's Va2Pa table (copy, virtual order)."""
+        return list(self._tables[req])
+
     # ------------------------------------------------------------------
     def _shard_cycle(self, req: int) -> list[int]:
         if self.policy == "row_affine":
@@ -83,14 +116,18 @@ class PageAllocator:
             return list(range(lo, lo + self.shards_per_row))
         return list(range(self.n_shards))
 
-    def can_admit(self, n_tokens: int, row: int | None = None) -> bool:
+    def can_admit(self, n_tokens: int, row: int | None = None,
+                  cached_pages: int = 0) -> bool:
+        """``cached_pages``: pages the request would borrow from the prefix
+        cache instead of allocating (reduces the need)."""
         need = self._pages_for(n_tokens)
         if self.static_max_pages is not None:
             need = self.static_max_pages
+        need = max(0, need - cached_pages)
         if self.policy == "row_affine":
             assert row is not None
-            return self.free_pages_in_row(row) >= need
-        return self.free_page_count >= need
+        return self.available_pages(row if self.policy == "row_affine"
+                                    else None) >= need
 
     def _pages_for(self, n_tokens: int) -> int:
         n = max(1, -(-n_tokens // self.page_size))
@@ -102,64 +139,154 @@ class PageAllocator:
         Under static mode reserves static_max_pages regardless of n_tokens —
         the baseline the paper's lazy allocation beats.
         """
-        assert req not in self._tables
+        return self.admit_shared(req, (), n_tokens, row)
+
+    def admit_shared(self, req: int, shared_pages, n_tokens: int,
+                     row: int | None = None) -> list[int]:
+        """Admit ``req`` whose leading pages are borrowed references to
+        already-resident pages (a prefix-cache hit): each shared page gets an
+        extra owner, and only the remainder of the prompt footprint is
+        allocated fresh. With ``shared_pages=()`` this is plain ``admit``."""
+        assert req not in self._tables, req
+        shared = list(shared_pages)
+        if shared:
+            assert self.static_max_pages is None and self.ring_pages is None, \
+                "prefix sharing is incompatible with static/ring allocation"
         if self.policy == "row_affine":
             assert row is not None
             self._row[req] = row
         self._tables[req] = []
         self._rr[req] = 0
-        need = self._pages_for(n_tokens)
-        if self.static_max_pages is not None:
-            need = self.static_max_pages
-        self._grow(req, need)
+        try:
+            for p in shared:
+                self.incref(p)
+                self._tables[req].append(p)
+            need = self._pages_for(n_tokens) - len(shared)
+            if self.static_max_pages is not None:
+                need = self.static_max_pages
+            if need > 0:
+                self._grow(req, need)
+        except MemoryError:
+            self.free(req)              # release borrowed refs + fresh pages
+            raise
         return list(self._tables[req])
 
     def ensure(self, req: int, n_tokens: int) -> list[int]:
         """Lazy growth: make sure the request can hold n_tokens; returns any
-        newly allocated pages (usually 0 or 1 per decode step)."""
+        newly allocated pages (usually 0 or 1 per decode step). Shrink-safe:
+        asking for fewer tokens than already covered is a no-op (pages are
+        only released by ``free``), and non-positive token counts are treated
+        as the minimum footprint."""
         need = self._pages_for(n_tokens)
         have = len(self._tables[req])
         if self.static_max_pages is not None and need > have:
             raise MemoryError(
                 f"req {req} exceeded static reservation ({need} > {have})")
-        return self._grow(req, need - have) if need > have else []
+        if need <= have:
+            return []
+        return self._grow(req, need - have)
+
+    def _pop_page(self, req: int) -> int | None:
+        """One page off the free lists, honoring placement policy; None when
+        the request's shard cycle is exhausted."""
+        cycle = self._shard_cycle(req)
+        if self.blocked_chunk:
+            v = len(self._tables[req])              # virtual page index
+            start = (v // self.blocked_chunk) % len(cycle)
+        else:
+            start = self._rr[req]
+        for i in range(len(cycle)):
+            s = cycle[(start + i) % len(cycle)]
+            if self._free[s]:
+                page = self._free[s].pop()
+                if not self.blocked_chunk:
+                    self._rr[req] = (start + i + 1) % len(cycle)
+                return page
+        return None
 
     def _grow(self, req: int, count: int) -> list[int]:
         new = []
-        cycle = self._shard_cycle(req)
         for _ in range(count):
-            placed = False
-            if self.blocked_chunk:
-                v = len(self._tables[req])          # virtual page index
-                start = (v // self.blocked_chunk) % len(cycle)
-            else:
-                start = self._rr[req]
-            for i in range(len(cycle)):
-                s = cycle[(start + i) % len(cycle)]
-                if self._free[s]:
-                    page = self._free[s].pop()
-                    self._tables[req].append(page)
-                    if not self.blocked_chunk:
-                        self._rr[req] = (start + i + 1) % len(cycle)
-                    new.append(page)
-                    placed = True
-                    break
-            if not placed:
+            page = self._pop_page(req)
+            if page is None and self.reclaimer is not None:
+                # pool exhausted: ask the cache to evict/offload cold pages,
+                # then retry (the paper's DPA never stalls on static waste;
+                # here the capacity tier absorbs the overflow instead)
+                if self.reclaimer.reclaim(count - len(new)) > 0:
+                    page = self._pop_page(req)
+            if page is None:
                 # roll back this grow to keep state consistent
                 for p in new:
                     self._tables[req].pop()
+                    del self._refs[p]
                     self._free[self.shard_of(p)].append(p)
                 raise MemoryError("page pool exhausted")
+            self._refs[page] = 1
+            self._tables[req].append(page)
+            new.append(page)
         return new
 
+    # ------------------------------------------------------------------
+    def alloc_pages(self, count: int) -> list[int]:
+        """Raw tree-owned allocation (no request table) — used by the prefix
+        cache to back swap-ins. Consults the reclaimer on exhaustion like
+        ``_grow`` (cold cached pages make room for hot swap-ins). Pages come
+        back with refcount 1; the caller owns the reference and releases via
+        ``decref``."""
+        new: list[int] = []
+        for _ in range(count):
+            page = self._pop_any()
+            if page is None and self.reclaimer is not None:
+                if self.reclaimer.reclaim(count - len(new)) > 0:
+                    page = self._pop_any()
+            if page is None:
+                for p in new:
+                    del self._refs[p]
+                    self._free[self.shard_of(p)].append(p)
+                raise MemoryError("page pool exhausted")
+            self._refs[page] = 1
+            new.append(page)
+        return new
+
+    def _pop_any(self) -> int | None:
+        for s in range(self.n_shards):
+            if self._free[s]:
+                return self._free[s].pop()
+        return None
+
+    def incref(self, page: int) -> None:
+        """Add an owner to a resident page (prefix sharing / tree retention)."""
+        if page not in self._refs:
+            raise ValueError(f"incref of unallocated page {page}")
+        self._refs[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one owner; frees the page when the last owner lets go.
+        Returns True iff the page went back to the free lists."""
+        ref = self._refs.get(page)
+        if ref is None:
+            raise ValueError(f"decref of free page {page} (double free?)")
+        if ref > 1:
+            self._refs[page] = ref - 1
+            return False
+        del self._refs[page]
+        self._free[self.shard_of(page)].append(page)
+        return True
+
     def free(self, req: int) -> int:
-        """Release all pages of a finished request (EOS). Returns page count."""
+        """Release all of a finished request's page references (EOS). Pages
+        shared with the prefix cache or other requests survive; exclusively
+        owned ones return to the free lists. Returns the number of pages
+        actually freed. Unknown / already-freed request ids raise — the
+        serving loop must never double-free (it would silently hand a live
+        request's pages to the next admission)."""
+        if req not in self._tables:
+            raise KeyError(
+                f"PageAllocator.free: unknown or already-freed request {req}")
         pages = self._tables.pop(req)
         self._rr.pop(req, None)
         self._row.pop(req, None)
-        for p in pages:
-            self._free[self.shard_of(p)].append(p)
-        return len(pages)
+        return sum(1 for p in pages if self.decref(p))
 
     # ------------------------------------------------------------------
     def block_table(self, req: int, width: int) -> np.ndarray:

@@ -104,26 +104,61 @@ def write_prefill(pool_layer_k, pool_layer_v, k_seq, v_seq, block_table,
     written (length-bucketed batched prefill pads prompts to a shared S; pad
     positions and -1 block-table entries route out of bounds and are dropped
     by the scatter).
+    ``ctx_start`` may be a scalar or a [B] vector (per-request resume depth
+    — prefix-cache suffix prefill batches requests with different matched
+    prefixes into one call).
     """
     B, S = k_seq.shape[:2]
     n_pool = pool_layer_k.shape[0]
     page = pool_layer_k.shape[1]
-    t = ctx_start + jnp.arange(S)
-    vpage = t // page                                     # [S]
+    t = (jnp.reshape(jnp.asarray(ctx_start, jnp.int32), (-1, 1))
+         + jnp.arange(S)[None])                           # [1|B, S]
+    vpage = t // page
     if ring_width:
         vpage = vpage % ring_width
     off = t % page
     pids = jnp.take_along_axis(block_table,
-                               jnp.broadcast_to(vpage[None], (B, S)), axis=1)
+                               jnp.broadcast_to(vpage, (B, S)), axis=1)
     pids = jnp.where(pids < 0, n_pool, pids)              # unallocated -> drop
     if valid_len is not None:
         pad = jnp.arange(S)[None] >= valid_len[:, None]   # [B, S]
         pids = jnp.where(pad, n_pool, pids)
-    offs = jnp.broadcast_to(off[None], (B, S))
+    offs = jnp.broadcast_to(off, (B, S))
     pk = pool_layer_k.at[pids, offs].set(k_seq.astype(pool_layer_k.dtype),
                                          mode="drop")
     pv = pool_layer_v.at[pids, offs].set(v_seq.astype(pool_layer_v.dtype),
                                          mode="drop")
+    return pk, pv
+
+
+def gather_pages(pool_k, pool_v, page_ids):
+    """Lift whole pages out of the pool (host-offload swap-out).
+
+    pool_{k,v} [L, P, page, KVH, D]; page_ids [n] (entries == P are pads and
+    gather page 0's data — the caller slices them off). Returns
+    k, v [L, n, page, KVH, D].
+    """
+    safe = jnp.minimum(jnp.maximum(page_ids, 0), pool_k.shape[1] - 1)
+    return pool_k[:, safe], pool_v[:, safe]
+
+
+def scatter_pages(pool_k, pool_v, page_ids, k_data, v_data):
+    """Write whole pages back into the pool (swap-in / CoW materialize).
+
+    page_ids [n]; k_data/v_data [L, n, page, KVH, D]. Entries == P (pads)
+    route out of bounds and are dropped.
+    """
+    pk = pool_k.at[:, page_ids].set(k_data.astype(pool_k.dtype), mode="drop")
+    pv = pool_v.at[:, page_ids].set(v_data.astype(pool_v.dtype), mode="drop")
+    return pk, pv
+
+
+def copy_page(pool_k, pool_v, src, dst):
+    """Device-side page copy (copy-on-write divergence): dst := src across
+    all layers. src/dst are scalar page ids (traced — one compile serves
+    every copy)."""
+    pk = pool_k.at[:, dst].set(pool_k[:, src])
+    pv = pool_v.at[:, dst].set(pool_v[:, src])
     return pk, pv
 
 

@@ -51,6 +51,11 @@ PIM_NODE = Node("PIM", 66, 4096, 65_500, 64, modules=8)
 
 INTER_NODE_BW_GBS = 10.0        # QSFP, paper §8.1
 HOST_SYNC_US = 10.0
+# Host DRAM offload link (PCIe/CXL-class) for the KV capacity tier below
+# the PIM pool (repro.kvcache.offload). Well under the module-internal
+# bandwidth: swapping a prefix in is only worth it when it replaces a
+# re-prefill, which the swap cost term below lets admission weigh.
+HOST_LINK_GBS = 16.0
 # Out-Reg drain path per module: 2-byte registers per PU, serialized RD-OUT
 # commands — an order of magnitude below the 64 GB/s interface. This is what
 # makes DT-Out ~half of QK^T latency in the paper's Fig. 7.
@@ -224,6 +229,17 @@ def decode_latency(sys: System, model: LLM, B: int, avg_ctx: float,
         t += ar / (INTER_NODE_BW_GBS * 1e9)
     return {"t_step": t, "t_attn": t_attn, "t_attn_io": t_attn_io,
             "t_fc": t_fc, "t_fc_io": t_fc_io}
+
+
+def swap_latency(model: LLM, n_tokens: float, *,
+                 link_gbs: float | None = None) -> float:
+    """Seconds to move ``n_tokens`` worth of KV across the host offload
+    link — the cost of treating host-resident (or reclaimable) KV pages as
+    admission capacity. Memory-aware admission adds this to a candidate's
+    modelled cost so a swap-heavy hit only wins when it beats the prefill
+    it replaces."""
+    bw = (link_gbs if link_gbs is not None else HOST_LINK_GBS) * 1e9
+    return n_tokens * model.kv_bytes_per_token / bw
 
 
 def throughput(sys: System, model: LLM, *, avg_ctx: float, max_ctx: float,

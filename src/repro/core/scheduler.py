@@ -7,7 +7,7 @@ from the waiting queue in the same scheduling tick — the paper's
 or static (baseline) allocation, which is how the lazy-allocation benchmark
 reproduces the paper's batch-size growth (Fig. 4(b), §5.4).
 
-Two serving hooks (repro.serving builds on these):
+Three serving hooks (repro.serving builds on these):
 
 * ``policy`` — admission is pluggable: a policy object picks which queued
   request fills an open slot (FCFS / SJF / memory-aware live in
@@ -18,6 +18,13 @@ Two serving hooks (repro.serving builds on these):
   are admitted / grown / freed instead of being rebuilt from the allocator
   dict every tick, so the engine's per-tick "configuration buffer" update
   (paper Fig. 2(c)) is O(changes), not O(slots x width).
+* ``cache`` — an optional ``repro.kvcache.PrefixCache``: admission borrows
+  the matched prefix pages (``admit_shared``) and records the resume depth
+  on the request (``cached_len``); finished *and preempted* requests insert
+  their written KV into the cache before freeing, so a preempted request
+  resumes from cached pages instead of re-prefilling. ``cache_tokens(req,
+  finished)`` is the engine-provided token-sequence oracle (the batcher
+  itself never sees token ids).
 """
 from __future__ import annotations
 
@@ -41,6 +48,14 @@ class Request:
     # the slot is occupied but excluded from decode.
     chunked_prefill: bool = False
     prefill_done: bool = True
+    # cached_len: tokens of KV borrowed from the prefix cache at admission;
+    # prefill starts at this depth (0 = cold).
+    cached_len: int = 0
+    # kv_written: the prompt's KV pages actually hold computed values (set
+    # by the prefillers once the prompt is through the model) — guards the
+    # cache-insert paths against adopting never-written pages when a request
+    # is admitted and preempted in the same tick.
+    kv_written: bool = False
 
     @property
     def total_len(self) -> int:
@@ -64,12 +79,15 @@ class SchedulerStats:
 class ContinuousBatcher:
     def __init__(self, allocator: PageAllocator, n_slots: int, *,
                  max_context: int, n_rows: int = 1, policy=None,
-                 bt_width: int | None = None):
+                 bt_width: int | None = None, cache=None, cache_tokens=None):
         self.alloc = allocator
         self.n_slots = n_slots
         self.max_context = max_context
         self.n_rows = n_rows
         self.policy = policy
+        # prefix cache + token oracle (see module docstring)
+        self.cache = cache
+        self.cache_tokens = cache_tokens
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
         self.stats = SchedulerStats()
@@ -120,18 +138,35 @@ class ContinuousBatcher:
         budget keeps the request's total emission where it would have been
         without preemption (``- generated + 1``: a fresh incarnation emits
         max_new + 1 tokens — prefill emits the first — while a resumed one
-        emits exactly max_new, one per decode tick)."""
-        self.alloc.free(req.req_id)
+        emits exactly max_new, one per decode tick).
+
+        With a prefix cache the written context is *inserted* before the
+        pages are released: the tree keeps them alive (or offloads them to
+        the host tier under pressure), so the re-admission's lookup resumes
+        from cache instead of re-prefilling — the swap-in-on-resume path."""
         if req.generated:
             req.prompt_len = req.total_len - 1
             req.max_new_tokens = max(1, req.max_new_tokens
                                      - req.generated + 1)
         req.generated = 0
         req.prefill_done = not req.chunked_prefill
+        req.cached_len = 0
+        self._release_pages(req, finished=False)
         self.queue.appendleft(req)
         self.slots[s] = None
         self._snap_clear(s)
         self.stats.preempted += 1
+
+    def _release_pages(self, req: Request, *, finished: bool) -> None:
+        """Free a request's pages; with a prefix cache, first record its
+        written KV under the radix tree (the tree's references keep shared
+        pages alive) and unpin its matched path."""
+        if self.cache is not None:
+            if req.kv_written:
+                self.cache.insert(req.req_id,
+                                  self.cache_tokens(req, finished))
+            self.cache.release(req.req_id)
+        self.alloc.free(req.req_id)
 
     def mark_prefill_done(self, s: int) -> bool:
         """Chunked prefill finished for slot ``s``: the request joins the
@@ -155,6 +190,34 @@ class ContinuousBatcher:
         return True
 
     # ------------------------------------------------------------------
+    def cached_pages(self, req: Request) -> int:
+        """Device pages a prefix-cache hit would let this queued request
+        borrow instead of allocating (admission-capacity estimate).
+        Host-resident matched pages do NOT reduce the need — their swap-in
+        consumes a device page apiece."""
+        if self.cache is None:
+            return 0
+        dev, _host = self.cache.peek(self.cache_tokens(req, False))
+        return dev
+
+    def _admit_one(self, req: Request, row: int | None) -> list[int] | None:
+        """Allocate a request's prompt footprint, borrowing the cached
+        prefix when a cache is attached. Returns the page table, or None if
+        the pool could not cover it even after reclaim (the request stays
+        queued)."""
+        if self.cache is None:
+            return self.alloc.admit(req.req_id, req.prompt_len, row)
+        hit = self.cache.lookup(req.req_id, self.cache_tokens(req, False))
+        try:
+            pages = self.alloc.admit_shared(req.req_id, hit.pages,
+                                            req.prompt_len, row)
+        except MemoryError:
+            self.cache.release(req.req_id)
+            return None
+        self.cache.commit(req.req_id, pages)
+        req.cached_len = hit.matched
+        return pages
+
     def _try_admit(self) -> list[tuple[int, Request]]:
         """Fill empty slots from the queue. Returns [(slot, request)] newly
         admitted (the engine must run prefill for these). With a policy the
@@ -171,12 +234,16 @@ class ContinuousBatcher:
                 if idx is None:
                     continue
             else:                      # seed behavior: strict head-of-line
-                if not self.alloc.can_admit(self.queue[0].prompt_len, row):
+                if not self.alloc.can_admit(self.queue[0].prompt_len, row,
+                                            self.cached_pages(self.queue[0])):
                     continue   # head-of-line blocked on memory; try next tick
                 idx = 0
             req = self.queue[idx]
+            pages = self._admit_one(req, row)
+            if pages is None:
+                continue               # reclaim couldn't cover it; next tick
             del self.queue[idx]
-            pages = self.alloc.admit(req.req_id, req.prompt_len, row)
+            req.kv_written = False
             self.slots[s] = req
             self._snap_admit(s, req, pages)
             self.stats.admitted += 1
@@ -195,7 +262,7 @@ class ContinuousBatcher:
         if finished_mask is not None:
             for s in np.flatnonzero(finished_mask):
                 if self.slots[s] is not None:
-                    self.alloc.free(self.slots[s].req_id)
+                    self._release_pages(self.slots[s], finished=True)
                     self.stats.completed += 1
                     self.slots[s] = None
                     self._snap_clear(s)

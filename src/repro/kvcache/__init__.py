@@ -1,0 +1,22 @@
+"""KV-cache hierarchy: radix prefix sharing + host offload tier.
+
+Layered under the serving engine (see docs/kvcache.md):
+
+* ``radix``   — token-prefix radix tree over allocator pages (refcounted
+  sharing, page-boundary splits, copy-on-write on mid-page divergence);
+* ``offload`` — host-DRAM capacity tier with ping-pong-style async swaps;
+* ``policy``  — pluggable placement/eviction (LRU, watermarks, swap cost);
+* ``cache``   — the ``PrefixCache`` facade the engine and scheduler use.
+"""
+from repro.kvcache.cache import CacheHit, CacheStats, PrefixCache
+from repro.kvcache.offload import DeviceOpQueue, HostTier, TierStats
+from repro.kvcache.policy import (EvictionPolicy, LRUPolicy, WatermarkConfig,
+                                  make_cache_policy)
+from repro.kvcache.radix import MatchResult, RadixNode, RadixTree
+
+__all__ = [
+    "PrefixCache", "CacheHit", "CacheStats",
+    "HostTier", "TierStats", "DeviceOpQueue",
+    "EvictionPolicy", "LRUPolicy", "WatermarkConfig", "make_cache_policy",
+    "RadixTree", "RadixNode", "MatchResult",
+]

@@ -1,0 +1,193 @@
+"""Host-memory KV tier: async page swap between the device pool and DRAM.
+
+The device page pool caps the admissible batch long before host DRAM is
+exhausted (the capacity argument of L3/PAM: a KV-centric hierarchy below the
+accelerator). This tier holds evicted radix-tree payloads as host numpy
+arrays, keyed by the tree node, and double-buffers the transfers against the
+decode loop in DCS ping-pong style:
+
+* **swap-out** dispatches one jitted page-gather against the current pool
+  and immediately releases the device pages — the gather result is a
+  functional snapshot, so the freed pages can be rewritten by the very next
+  prefill without corrupting the in-flight copy. The jax arrays are kept as
+  the host payload and *drained* to numpy at the next tick boundary
+  (``drain``), off the critical path.
+* **swap-in** allocates fresh device pages and queues a jitted page-scatter;
+  the cache facade applies all queued scatters in one batch before the
+  tick's prefill reads them.
+
+Transfer shapes are padded to powers of two (pad slots route to the
+out-of-range page and are dropped by the scatter) so the jit cache stays
+O(log pool) instead of one compile per transfer size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paged_kv import copy_page, gather_pages, scatter_pages
+
+
+def _pad_ids(page_ids: list[int], n_pool: int) -> np.ndarray:
+    """Pad to the next power of two; pads point one past the pool (gathers
+    read garbage that the host side slices off; scatters drop them)."""
+    n = max(1, len(page_ids))
+    p = 1
+    while p < n:
+        p *= 2
+    out = np.full((p,), n_pool, np.int32)
+    out[:len(page_ids)] = page_ids
+    return out
+
+
+@jax.jit
+def _gather(pool_k, pool_v, ids):
+    return gather_pages(pool_k, pool_v, ids)
+
+
+@jax.jit
+def _scatter(pool_k, pool_v, ids, k, v):
+    return scatter_pages(pool_k, pool_v, ids, k, v)
+
+
+@jax.jit
+def _copy(pool_k, pool_v, src, dst):
+    return copy_page(pool_k, pool_v, src, dst)
+
+
+@dataclass
+class TierStats:
+    swapped_out_pages: int = 0
+    swapped_in_pages: int = 0
+    dropped_pages: int = 0          # evicted without a host copy
+    peak_host_pages: int = 0
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
+class HostTier:
+    """Bounded host-DRAM store for offloaded radix-node payloads."""
+
+    def __init__(self, capacity_pages: int):
+        self.capacity = capacity_pages
+        self.used = 0
+        self.stats = TierStats()
+        self._pending: list  # nodes whose payload is still a jax array
+        self._pending = []
+
+    def has_space(self, n_pages: int) -> bool:
+        return self.used + n_pages <= self.capacity
+
+    # ------------------------------------------------------------------
+    def swap_out(self, node, pool: dict) -> None:
+        """Dispatch the gather for ``node``'s device pages and take ownership
+        of the (still in-flight) result. The caller releases the device
+        pages right after — see module docstring for why that is safe."""
+        ids = node.pages
+        pad = _pad_ids(ids, pool["k"].shape[1])
+        k, v = _gather(pool["k"], pool["v"], jnp.asarray(pad))
+        node.host = {"k": k[:, :len(ids)], "v": v[:, :len(ids)]}
+        node.pages = None
+        self.used += len(ids)
+        self.stats.swapped_out_pages += len(ids)
+        self.stats.peak_host_pages = max(self.stats.peak_host_pages,
+                                         self.used)
+        self._pending.append(node)
+
+    def drain(self) -> None:
+        """Materialize pending swap-outs to host numpy (ping-pong: issued
+        last tick, collected this tick). Nodes already re-materialized to
+        device (host=None) or split (narrowed arrays) convert just the same."""
+        for node in self._pending:
+            if node.host is not None:
+                node.host = {"k": np.asarray(node.host["k"]),
+                             "v": np.asarray(node.host["v"])}
+        self._pending.clear()
+
+    def take(self, node) -> dict:
+        """Claim a node's host payload for swap-in (device side re-owns it)."""
+        data = node.host
+        n = int(data["k"].shape[1])
+        self.used -= n
+        self.stats.swapped_in_pages += n
+        node.host = None
+        return data
+
+    def discard(self, node) -> None:
+        """Drop a host-resident node's payload (tier eviction)."""
+        n = node.n_pages
+        self.used -= n
+        self.stats.dropped_pages += n
+        node.host = None
+
+
+class DeviceOpQueue:
+    """Pending device-side page ops (CoW copies, swap-in scatters) queued by
+    host bookkeeping and applied to the functional pool in one place, before
+    the tick's prefill — the cache's half of the ping-pong."""
+
+    def __init__(self):
+        self._scatters: list[tuple[np.ndarray, object, object]] = []
+        self._copies: list[tuple[object, int, int]] = []   # (tag, src, dst)
+        self._host_writes: list[tuple[object, int, dict]] = []
+
+    @property
+    def empty(self) -> bool:
+        return not (self._scatters or self._copies or self._host_writes)
+
+    def queue_scatter(self, page_ids: list[int], k, v) -> None:
+        self._scatters.append((list(page_ids), k, v))
+
+    def queue_copy(self, tag, src_page: int, dst_page: int) -> None:
+        self._copies.append((tag, src_page, dst_page))
+
+    def queue_host_write(self, tag, dst_page: int, data: dict) -> None:
+        """Write one host-resident page into ``dst_page`` (host-side CoW)."""
+        self._host_writes.append((tag, dst_page, data))
+
+    def cancel(self, tag) -> None:
+        """Drop queued request-tagged ops (the request was preempted before
+        they applied; its target pages are being released)."""
+        self._copies = [c for c in self._copies if c[0] != tag]
+        self._host_writes = [w for w in self._host_writes if w[0] != tag]
+
+    def inflight_pages(self) -> set[int]:
+        """Pages with a queued write — protected from eviction until applied."""
+        out: set[int] = set()
+        for ids, _, _ in self._scatters:
+            out.update(ids)
+        for _, src, dst in self._copies:
+            out.update((src, dst))
+        for _, dst, _ in self._host_writes:
+            out.add(dst)
+        return out
+
+    def apply(self, pool: dict) -> dict:
+        """Apply every queued op to the (functional) pool; returns the new
+        pool. Order: scatters (swap-ins) first, then copies — a CoW source
+        may itself be a page that just swapped in."""
+        pk, pv = pool["k"], pool["v"]
+        n_pool = pk.shape[1]
+        for ids, k, v in self._scatters:
+            n = len(ids)
+            pad = _pad_ids(ids, n_pool)
+            kz = jnp.zeros((pk.shape[0], len(pad)) + pk.shape[2:], pk.dtype)
+            kz = kz.at[:, :n].set(jnp.asarray(k).astype(pk.dtype))
+            vz = jnp.zeros_like(kz)
+            vz = vz.at[:, :n].set(jnp.asarray(v).astype(pv.dtype))
+            pk, pv = _scatter(pk, pv, jnp.asarray(pad), kz, vz)
+        for _, dst, data in self._host_writes:
+            pad = _pad_ids([dst], n_pool)
+            kz = jnp.asarray(data["k"]).astype(pk.dtype)
+            vz = jnp.asarray(data["v"]).astype(pv.dtype)
+            pk, pv = _scatter(pk, pv, jnp.asarray(pad), kz, vz)
+        for _, src, dst in self._copies:
+            pk, pv = _copy(pk, pv, jnp.int32(src), jnp.int32(dst))
+        self._scatters.clear()
+        self._copies.clear()
+        self._host_writes.clear()
+        return {"k": pk, "v": pv}

@@ -9,6 +9,12 @@ throughput, host overhead, preemptions, and page-pool balance. ``--static``
 switches to baseline-PIM static allocation for the comparison;
 ``--prefill-mode`` picks slot / batched / chunked prefill and
 ``--sched-policy`` the admission policy (see repro.serving).
+
+``--shared-frac f`` makes every request start with a common system prompt
+covering fraction ``f`` of its tokens (multi-tenant shared-prefix traffic);
+``--prefix-cache`` turns on the radix KV sharing and ``--host-pages N``
+adds the host offload tier below the device pool (see repro.kvcache /
+docs/kvcache.md). Cache hit/swap counters are reported alongside.
 """
 from __future__ import annotations
 
@@ -30,7 +36,9 @@ def build_engine(args) -> DecodeEngine:
                         static_alloc=args.static, eos_token=-1,
                         prefill_mode=args.prefill_mode,
                         prefill_chunk=args.chunk,
-                        sched_policy=args.sched_policy)
+                        sched_policy=args.sched_policy,
+                        prefix_cache=args.prefix_cache,
+                        host_pages=args.host_pages)
     return DecodeEngine(cfg, ecfg)
 
 
@@ -43,10 +51,18 @@ def submit_trace(eng: DecodeEngine, args) -> None:
     factor = (args.max_context / 2) / LONGBENCH_STATS[args.task]["mean"]
     trace = request_trace(args.task, args.requests, seed=0,
                           mean_new_tokens=args.mean_new)
+    # common system prompt: every request opens with the same token run —
+    # the multi-tenant traffic shape radix prefix sharing pays off on
+    system = rng.integers(0, eng.cfg.vocab_size,
+                          size=args.max_context) if args.shared_frac else None
     for i, (plen, new) in enumerate(trace):
         plen = max(1, min(int(plen * factor),
                           args.max_context - new - 1))
-        eng.submit(i, rng.integers(0, eng.cfg.vocab_size, size=plen), new)
+        prompt = rng.integers(0, eng.cfg.vocab_size, size=plen)
+        if system is not None:
+            k = min(int(plen * args.shared_frac), plen - 1)
+            prompt[:k] = system[:k]
+        eng.submit(i, prompt, new)
 
 
 def main(argv=None):
@@ -66,6 +82,13 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--sched-policy", default="fcfs",
                     choices=["fcfs", "sjf", "memory_aware"])
+    ap.add_argument("--shared-frac", type=float, default=0.0,
+                    help="fraction of each prompt drawn from a common "
+                         "system prompt")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix sharing across requests")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host offload tier capacity in pages (0 = none)")
     args = ap.parse_args(argv)
 
     eng = build_engine(args)
@@ -86,6 +109,13 @@ def main(argv=None):
     bal = eng.alloc.shard_balance()
     print(f"[serve] page balance per shard: max={bal.max()} min={bal.min()}",
           flush=True)
+    if eng.cache is not None:
+        cs = eng.cache.stats_dict()
+        print(f"[serve] kvcache: hits={cs['hits']}/{cs['lookups']} "
+              f"reused_tokens={cs['hit_tokens']} cow={cs['cow_copies']} "
+              f"evicted={cs['evicted_pages']} "
+              f"swap_out={cs.get('swapped_out_pages', 0)} "
+              f"swap_in={cs.get('swapped_in_pages', 0)}", flush=True)
     return st.avg_batch
 
 

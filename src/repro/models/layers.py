@@ -119,7 +119,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """Memory-bounded attention via online softmax over KV chunks.
 
     q [B, Sq, H, D]; k,v [B, Skv, KVH, D]. ``q_offset`` is the global position
-    of q[0] relative to k[0] (sequence-parallel shards / prefill continuation).
+    of q[0] relative to k[0] (sequence-parallel shards / prefill
+    continuation); a [B] vector gives each request its own offset
+    (prefix-cache suffix prefill batches different resume depths).
     ``window``>0 restricts attention to the last ``window`` keys (inclusive of
     self); it may be a traced scalar (per-layer scan value), 0 = unwindowed.
     Returns [B, Sq, H, D].
@@ -139,7 +141,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     qt = q.reshape(b, sq, kvh, g, d).transpose(0, 2, 3, 1, 4)  # [B,KVH,G,Sq,d]
     qt = qt.astype(jnp.float32)
-    q_pos = (jnp.arange(sq) + q_offset)[None, :]               # [1,Sq]
+    q_pos = (jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1, 1))
+             + jnp.arange(sq)[None, :])                        # [1|B,Sq]
     scale = 1.0 / math.sqrt(d)
     w = jnp.asarray(window, jnp.int32)
 

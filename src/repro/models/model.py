@@ -687,7 +687,9 @@ def prefill_chunk(cfg, params, state, tokens, bt, ctx_start, *,
     each layer writes the chunk's K/V via ``write_prefill(ctx_start=...)``,
     gathers its pages, and attends with ``q_offset=ctx_start`` so the causal
     mask spans prior chunks. ``ctx_start``/``last_idx``/``valid_len`` may be
-    traced, so one jit serves every chunk position.
+    traced, so one jit serves every chunk position; ``ctx_start`` may also
+    be a [B] vector — each request resumes at its own depth (prefix-cache
+    suffix prefill over a batch of different matched lengths).
 
     Uniform-attention stacks only (``params["layers"]``, non-ring pools) —
     recurrent/enc-dec families keep whole-prompt prefill. Returns (fp32
@@ -699,7 +701,9 @@ def prefill_chunk(cfg, params, state, tokens, bt, ctx_start, *,
     B, C = tokens.shape
     x = L.embed(params["embed"], tokens)
     x = rt.constrain(x, "act")
-    positions = default_positions(cfg, B, C, offset=ctx_start)
+    start = jnp.asarray(ctx_start, jnp.int32)
+    positions = default_positions(
+        cfg, B, C, offset=start if start.ndim == 0 else start[:, None])
     cs = _cos_sin(cfg, positions)
     windows = jnp.asarray(_window_array(cfg))
     pool = state["pool"]
@@ -713,11 +717,11 @@ def prefill_chunk(cfg, params, state, tokens, bt, ctx_start, *,
         if cs is not None:
             q = L.apply_rope(q, *cs)
             k = L.apply_rope(k, *cs)
-        pkl, pvl = write_prefill(pkl, pvl, k, v, bt, ctx_start=ctx_start,
+        pkl, pvl = write_prefill(pkl, pvl, k, v, bt, ctx_start=start,
                                  valid_len=valid_len)
         kf, vf = gather_kv(pkl, pvl, bt)        # [B, maxp*page, KVH, D]
         a = L.flash_attention(q, kf, vf, causal=True, window=w,
-                              q_offset=ctx_start)
+                              q_offset=start)
         h = h + L.dense(a.reshape(B, C, cfg.q_dim), lp["attn"]["wo"])
         if "ln2" in lp:
             h2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)

@@ -11,7 +11,13 @@ each is replaceable:
   admission policy (``serving.policies``: FCFS / SJF / memory-aware);
 * prefill   — ``serving.prefill``: per-slot (seed), length-bucketed batched,
   or chunked DCS-style interleave with decode;
-* sampling  — ``serving.sampling``: jitted greedy / temperature / top-k.
+* sampling  — ``serving.sampling``: jitted greedy / temperature / top-k;
+* KV reuse  — ``repro.kvcache.PrefixCache`` (optional): radix prefix
+  sharing across requests plus a host-DRAM offload tier. Admission borrows
+  matched pages, prefill starts at the matched depth, and the engine
+  replays the cache's queued device ops (CoW copies, swap-in scatters)
+  against the pool once per tick before prefill — the host side of the
+  ping-pong.
 
 Host bookkeeping (npage/noff/block-table assembly) is vectorized over the
 slot axis against the batcher's incrementally-maintained snapshots — the
@@ -62,6 +68,12 @@ class EngineConfig:
     temperature: float = 1.0
     top_k: int = 0
     sample_seed: int = 0
+    # ---- KV-cache hierarchy (repro.kvcache) ----
+    prefix_cache: bool = False        # radix prefix sharing across requests
+    host_pages: int = 0               # host offload tier capacity (0 = none)
+    offload_high: float = 0.85        # device watermarks driving offload
+    offload_low: float = 0.60
+    cache_evict: str = "lru"
 
 
 @dataclass
@@ -120,6 +132,24 @@ class DecodeEngine:
         self.batchable = "layers" in self.params and cfg.family != "encdec" \
             and not self.rt.ring_width and self.rt.write_pool is None
         self.chunkable = self.batchable
+        # prefix cache: uniform-attention stacks with plain lazy allocation
+        # only (static reservations and ring pools can't share pages, and
+        # row-affine placement would break borrowing across rows)
+        self.cache = None
+        if ecfg.prefix_cache and self.chunkable and not ecfg.static_alloc \
+                and ecfg.policy == "striped":
+            from repro.kvcache import PrefixCache, WatermarkConfig, \
+                make_cache_policy
+            self.cache = PrefixCache(
+                self.alloc,
+                policy=make_cache_policy(ecfg.cache_evict,
+                                         watermark=WatermarkConfig(
+                                             ecfg.offload_high,
+                                             ecfg.offload_low)),
+                host_pages=ecfg.host_pages,
+                pool_ref=lambda: self.state["pool"])
+            self.batcher.cache = self.cache
+            self.batcher.cache_tokens = self._cache_tokens
         self.prefiller = make_prefiller(ecfg.prefill_mode, self)
         self.timing = EngineTiming()
         self._decode_jit = None
@@ -150,8 +180,26 @@ class DecodeEngine:
         return np.concatenate(
             [prompt, np.asarray(out[:-1], np.int32)])[:req.prompt_len], False
 
+    def _cache_tokens(self, req, finished: bool = False) -> np.ndarray:
+        """Token-sequence oracle for the prefix cache (the batcher holds no
+        token ids). ``finished=False``: the context a (re)admission must
+        cover — exactly ``_prompt_seq``. ``finished=True``: every token
+        whose KV was written — prompt plus all generated tokens except the
+        final sample (EOS / budget hit), whose KV never landed."""
+        if not finished:
+            return self._prompt_seq(req)[0]
+        prompt = self.prompts[req.req_id]
+        out = np.asarray(self.outputs[req.req_id], np.int32)
+        return np.concatenate([prompt, out])[:req.total_len - 1]
+
     def _emit_first(self, slot: int, req, logits_row: np.ndarray,
                     emit: bool) -> None:
+        # the whole prompt's KV is in the pool now: publish the prefix to
+        # the radix cache so later same-prefix admissions hit while this
+        # request is still running
+        req.kv_written = True
+        if self.cache is not None:
+            self.cache.insert(req.req_id, self._prompt_seq(req)[0])
         if emit:
             tok = int(self._sample_one(logits_row))
             self.tokens[slot] = tok
@@ -178,6 +226,14 @@ class DecodeEngine:
         E = self.ecfg
         t0 = time.perf_counter()
         admitted, active = self.batcher.step(finished_mask)
+        if self.cache is not None:
+            # drain last tick's swap-outs + watermark offload (ping-pong),
+            # then replay queued device ops (swap-in scatters, CoW copies)
+            # so prefill and decode read fully materialized pages
+            self.cache.maintain()
+            if self.cache.has_pending:
+                self.state["pool"] = self.cache.apply_pending(
+                    self.state["pool"])
         t1 = time.perf_counter()
         self.timing.host_s += t1 - t0
         if admitted or self.prefiller.busy:

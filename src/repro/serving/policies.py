@@ -24,7 +24,8 @@ class SchedulingPolicy:
 
     def _admissible(self, batcher, row):
         for i, req in enumerate(batcher.queue):
-            if batcher.alloc.can_admit(req.prompt_len, row):
+            if batcher.alloc.can_admit(req.prompt_len, row,
+                                       batcher.cached_pages(req)):
                 yield i, req
 
 
@@ -35,7 +36,8 @@ class FCFSPolicy(SchedulingPolicy):
 
     def select(self, batcher, row=None):
         q = batcher.queue
-        if q and batcher.alloc.can_admit(q[0].prompt_len, row):
+        if q and batcher.alloc.can_admit(q[0].prompt_len, row,
+                                         batcher.cached_pages(q[0])):
             return 0
         return None
 
@@ -74,6 +76,13 @@ class MemoryAwarePolicy(SchedulingPolicy):
     admissible candidates the policy picks the one the cost model says
     yields the lowest per-token decode latency at the resulting batch.
 
+    With a prefix cache attached the capacity side counts reclaimable cached
+    pages (``alloc.available_pages``) and a candidate's need shrinks by its
+    matched prefix — shared and host-offloaded KV are admission capacity.
+    The price of the host-resident part, one swap-in over the host link, is
+    added to the candidate's modelled cost (``pim_model.swap_latency``) so a
+    swap-heavy hit only wins when it beats the prefill it replaces.
+
     When the system is idle and no candidate passes the lifetime check, the
     policy degrades to FCFS admission so a single oversized request cannot
     livelock the queue (it will run under preemption, as the seed did).
@@ -90,26 +99,43 @@ class MemoryAwarePolicy(SchedulingPolicy):
     def _lifetime_pages(self, alloc, req) -> int:
         return -(-(req.prompt_len + req.max_new_tokens) // alloc.page_size)
 
-    def _cost(self, batcher, req) -> float:
-        """Modelled seconds/token if ``req`` joins the current batch."""
+    def _cached(self, batcher, req) -> tuple[int, int]:
+        """(device, host) pages the prefix cache would cover."""
+        if batcher.cache is None:
+            return 0, 0
+        return batcher.cache.peek(batcher.cache_tokens(req, False))
+
+    def _cost(self, batcher, req, host_pages: int = 0) -> float:
+        """Modelled seconds/token if ``req`` joins the current batch, plus
+        the amortized swap-in of its host-resident prefix."""
         ctxs = [r.total_len for r in batcher.slots if r is not None]
         B = len(ctxs) + 1
         avg = (sum(ctxs) + req.prompt_len + req.max_new_tokens) / B
-        return PM.decode_latency(self.system, self.model, B,
+        cost = PM.decode_latency(self.system, self.model, B,
                                  max(avg, 1.0))["t_step"] / B
+        if host_pages:
+            swap = PM.swap_latency(self.model,
+                                   host_pages * batcher.alloc.page_size)
+            cost += swap / max(1, req.max_new_tokens)
+        return cost
 
     def select(self, batcher, row=None):
         alloc = batcher.alloc
-        free = alloc.free_pages_in_row(row) if row is not None \
-            else alloc.free_page_count
+        free = alloc.available_pages(row if alloc.policy == "row_affine"
+                                     else None)
         best, best_cost = None, math.inf
         fallback = None
         for i, req in self._admissible(batcher, row):
             if fallback is None:
                 fallback = i
-            if self._lifetime_pages(alloc, req) + self.headroom > free:
+            dev, host = self._cached(batcher, req)
+            # host-resident matched pages don't reduce the device need
+            # (swap-in consumes a device page apiece) — they only shift
+            # cost from prefill compute to the host link
+            need = self._lifetime_pages(alloc, req) - dev
+            if need + self.headroom > free:
                 continue                    # would preempt mid-decode: refuse
-            cost = self._cost(batcher, req)
+            cost = self._cost(batcher, req, host)
             if cost < best_cost:
                 best, best_cost = i, cost
         if best is None and fallback is not None \

@@ -20,6 +20,13 @@ Three ways to get an admitted prompt into the paged pool:
 
 ``make_prefiller`` picks the implementation and silently degrades to
 ``slot`` when the engine's model family can't support the requested mode.
+
+Prefix-cache hits (``req.cached_len > 0``) prefill only the *suffix* beyond
+the matched depth in every mode: ``chunked`` simply starts its chunk cursor
+there, while ``slot``/``batched`` route hits through the ``prefill_chunk``
+path — batched groups hits into suffix-length buckets and passes the
+per-request resume depths as a vector ``ctx_start``, so one jitted call
+covers requests with different matched prefixes.
 """
 from __future__ import annotations
 
@@ -49,12 +56,54 @@ def _make_chunk_fn(cfg, rt):
     return jax.jit(fn)
 
 
+def _suffix_bucket(n: int, cap: int) -> int:
+    b = 8
+    while b < n and b < cap:
+        b *= 2
+    return b if b >= n else -(-n // cap) * cap
+
+
+def prefill_suffix(eng, fn, grp) -> None:
+    """One jitted ``prefill_chunk`` call covering a group of cache-hit
+    requests: suffixes padded to a shared bucket length, per-request resume
+    depths as the ``ctx_start`` vector. ``grp``: [(slot, req, seq, emit)]
+    with equal bucket sizes; ``fn`` is a ``_make_chunk_fn`` jit."""
+    cap = max(8, eng.ecfg.max_prefill)
+    blen = max(_suffix_bucket(len(seq) - req.cached_len, cap)
+               for _, req, seq, _ in grp)
+    toks = np.zeros((len(grp), blen), np.int32)
+    starts = np.zeros((len(grp),), np.int32)
+    lens = np.zeros((len(grp),), np.int32)
+    for i, (_, req, seq, _) in enumerate(grp):
+        suf = seq[req.cached_len:]
+        toks[i, :len(suf)] = suf
+        starts[i] = req.cached_len
+        lens[i] = len(suf)
+    bts = np.stack([eng.batcher.block_table_row(slot) for slot, *_ in grp])
+    # the chunk path gathers every block-table slot per layer: slice the
+    # table to the pages this group's context actually spans (pow2-bucketed
+    # so the jit cache stays small) instead of the max_context width
+    need = -(-max(len(seq) for _, _, seq, _ in grp) // eng.ecfg.page_size) + 1
+    bts = bts[:, :min(_suffix_bucket(need, need), bts.shape[1])]
+    logits, pool = fn(
+        eng.params, eng.state["pool"], jnp.asarray(toks), jnp.asarray(bts),
+        jnp.asarray(starts), jnp.asarray(lens - 1), jnp.asarray(lens))
+    eng.state["pool"] = pool
+    logits = np.asarray(logits)
+    for i, (slot, req, _, emit) in enumerate(grp):
+        req.generated = 1
+        eng._emit_first(slot, req, logits[i], emit)
+
+
 class SlotPrefiller:
-    """Per-request whole-prompt prefill (seed semantics)."""
+    """Per-request whole-prompt prefill (seed semantics); prefix-cache hits
+    take the batch-1 suffix path instead."""
     name = "slot"
 
     def __init__(self, engine):
         self.eng = engine
+        self._suffix_fn = _make_chunk_fn(engine.cfg, engine.rt) \
+            if engine.chunkable else None
 
     @property
     def busy(self) -> bool:
@@ -62,7 +111,12 @@ class SlotPrefiller:
 
     def run(self, admitted, active):
         for slot, req in admitted:
-            self._prefill_slot(slot, req)
+            if req.cached_len > 0:
+                seq, emit = self.eng._prompt_seq(req)
+                prefill_suffix(self.eng, self._suffix_fn,
+                               [(slot, req, seq, emit)])
+            else:
+                self._prefill_slot(slot, req)
         return active
 
     def _prefill_slot(self, slot: int, req) -> None:
@@ -98,23 +152,23 @@ class SlotPrefiller:
 
 
 class BatchedPrefiller:
-    """Length-bucketed batched prefill: every bucket is one jitted call."""
+    """Length-bucketed batched prefill: every bucket is one jitted call.
+    Prefix-cache hits go through suffix-length buckets instead (vector
+    ``ctx_start`` — one call per bucket, mixed resume depths)."""
     name = "batched"
 
     def __init__(self, engine):
         self.eng = engine
         self._fn = _make_batched_fn(engine.cfg, engine.rt)
+        self._suffix_fn = _make_chunk_fn(engine.cfg, engine.rt) \
+            if engine.chunkable else None
 
     @property
     def busy(self) -> bool:
         return False
 
     def _bucket(self, n: int) -> int:
-        cap = max(8, self.eng.ecfg.max_prefill)
-        b = 8
-        while b < n and b < cap:
-            b *= 2
-        return b if b >= n else -(-n // cap) * cap
+        return _suffix_bucket(n, max(8, self.eng.ecfg.max_prefill))
 
     def run(self, admitted, active):
         eng = self.eng
@@ -122,11 +176,19 @@ class BatchedPrefiller:
             return active
         groups: dict[int, list] = {}
         fresh: dict[int, bool] = {}
+        sgroups: dict[int, list] = {}
         for slot, req in admitted:
             seq, emit = eng._prompt_seq(req)
+            if req.cached_len > 0:
+                sgroups.setdefault(
+                    self._bucket(len(seq) - req.cached_len), []).append(
+                        (slot, req, seq, emit))
+                continue
             groups.setdefault(self._bucket(len(seq)), []).append(
                 (slot, req, seq))
             fresh[slot] = emit
+        for blen in sorted(sgroups):
+            prefill_suffix(eng, self._suffix_fn, sgroups[blen])
         for blen in sorted(groups):
             grp = groups[blen]
             toks = np.zeros((len(grp), blen), np.int32)
@@ -165,8 +227,9 @@ class ChunkedPrefiller:
 
     def run(self, admitted, active):
         eng = self.eng
-        for slot, _ in admitted:
-            self._pos[slot] = 0
+        for slot, req in admitted:
+            # prefix-cache hits resume chunking at the matched depth
+            self._pos[slot] = req.cached_len
         if not self._pos:
             return active
         C = max(1, eng.ecfg.prefill_chunk)

@@ -86,3 +86,79 @@ def test_ring_mode_caps_pages():
     alloc.admit(0, 4)
     alloc.ensure(0, 1000)                        # unbounded tokens...
     assert len(alloc._tables[0]) == 3            # ...bounded pages (SWA)
+
+
+def test_free_rejects_unknown_and_double_free():
+    alloc = PageAllocator(16, 1, 4)
+    alloc.admit(0, 8)
+    with pytest.raises(KeyError):
+        alloc.free(99)                           # never admitted
+    assert alloc.free(0) == 2
+    with pytest.raises(KeyError):
+        alloc.free(0)                            # double free
+    assert alloc.pages_in_use == 0               # guards left state intact
+    with pytest.raises(ValueError):
+        alloc.decref(0)                          # page already free
+
+
+def test_ensure_is_shrink_safe():
+    alloc = PageAllocator(16, 1, 4)
+    alloc.admit(0, 12)                           # 3 pages
+    before = list(alloc._tables[0])
+    assert alloc.ensure(0, 4) == []              # fewer tokens: no-op
+    assert alloc.ensure(0, 0) == []              # degenerate: no-op
+    assert alloc.ensure(0, -5) == []
+    assert alloc._tables[0] == before            # pages never released
+    assert alloc.ensure(0, 13) != []             # growth still works
+    assert alloc.pages_in_use == 4
+
+
+def test_refcounted_sharing_and_release():
+    """admit_shared borrows page references; a page only frees when its
+    last owner (request or cache) lets go."""
+    alloc = PageAllocator(16, 1, 4)
+    pages = alloc.admit(0, 16)                   # 4 pages
+    alloc.admit_shared(1, pages[:2], 12)         # borrow 2, allocate 1
+    assert alloc.pages_of(1)[:2] == pages[:2]
+    assert alloc.ref_of(pages[0]) == 2
+    assert alloc.pages_in_use == 5               # shared pages counted once
+    assert alloc.free(0) == 2                    # only its exclusive pages
+    assert alloc.ref_of(pages[0]) == 1           # req 1 still owns the share
+    assert alloc.free(1) == 3
+    assert alloc.pages_in_use == 0
+
+
+def test_grow_consults_reclaimer_on_exhaustion():
+    class Reclaimer:
+        def __init__(self, alloc):
+            self.alloc = alloc
+            self.hoard: list[int] = []
+            self.calls = 0
+
+        def reclaimable(self):
+            return len(self.hoard)
+
+        def reclaim(self, n):
+            self.calls += 1
+            freed = 0
+            while self.hoard and freed < n:
+                self.alloc.decref(self.hoard.pop())
+                freed += 1
+            return freed
+
+    alloc = PageAllocator(8, 1, 4)
+    rec = Reclaimer(alloc)
+    alloc.reclaimer = rec
+    pages = alloc.admit(0, 32)                   # whole pool
+    rec.hoard = [p for p in pages[4:]]
+    for p in rec.hoard:
+        alloc.incref(p)
+    alloc.free(0)                                # 4 free, 4 hoarded
+    assert alloc.free_page_count == 4
+    assert alloc.available_pages() == 8          # hoard counts as capacity
+    assert alloc.can_admit(32)
+    got = alloc.admit(1, 32)                     # needs all 8: forces reclaim
+    assert len(got) == 8 and rec.calls >= 1
+    assert rec.reclaimable() == 0
+    alloc.free(1)
+    assert alloc.pages_in_use == 0

@@ -1,0 +1,282 @@
+"""KV-cache hierarchy tests: radix-tree invariants (property-style),
+CoW/eviction/offload mechanics, and end-to-end token-identity of the
+serving engine with prefix sharing on vs off."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # graceful fallback: example-based driver
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.allocator import PageAllocator
+from repro.kvcache import PrefixCache, RadixTree
+
+PAGE = 4
+
+
+def make_cache(n_pages=64, page_size=PAGE, host_pages=0):
+    alloc = PageAllocator(n_pages, 1, page_size)
+    return alloc, PrefixCache(alloc, host_pages=host_pages)
+
+
+def tree_invariants(cache):
+    """Structural invariants that must hold after any op sequence."""
+    tree, alloc = cache.tree, cache.alloc
+    seen: set[int] = set()
+    for node in tree.nodes():
+        ps = tree.page_size
+        assert len(node.tokens) > 0
+        assert len(node.tokens) % ps == 0, "nodes split at page boundaries"
+        if node.on_host:
+            assert node.pages is None
+            assert node.host["k"].shape[1] == len(node.tokens) // ps
+        else:
+            assert len(node.pages) == len(node.tokens) // ps
+            for p in node.pages:
+                assert p not in seen, "page owned by two tree nodes"
+                assert alloc.ref_of(p) >= 1, "tree page without a reference"
+                seen.add(p)
+        for tok, child in node.children.items():
+            assert child.parent is node
+            assert int(child.tokens[0]) == tok
+        assert node.ref >= sum(c.ref for c in node.children.values()), \
+            "path pins must be monotone toward the root"
+
+
+def _seq(data, shared, n):
+    """Token sequence sharing a prefix of ``shared`` with a common base."""
+    base = np.arange(1000, 1000 + shared, dtype=np.int32)
+    priv = np.asarray([data.draw(st.integers(0, 500))
+                       for _ in range(max(0, n - shared))], np.int32)
+    return np.concatenate([base[:min(shared, n)], priv])[:n]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_radix_insert_match_evict_invariants(data):
+    """Random interleaving of admit(lookup+admit_shared) / insert / free /
+    reclaim keeps the tree structurally sound, the page refcounts
+    conserved, and every match a true prefix of the inserted corpus."""
+    alloc, cache = make_cache(n_pages=48)
+    rng = data
+    live: dict[int, np.ndarray] = {}
+    next_req = 0
+    for _ in range(rng.draw(st.integers(5, 30))):
+        action = rng.draw(st.sampled_from(
+            ["admit", "finish", "reclaim", "lookup"]))
+        if action == "admit" and alloc.available_pages() >= 8:
+            shared = rng.draw(st.integers(0, 20))
+            n = rng.draw(st.integers(2, 24))
+            seq = _seq(rng, shared, n)
+            hit = cache.lookup(next_req, seq)
+            # a hit must be a true prefix of the request's sequence
+            assert hit.matched < len(seq)
+            try:
+                alloc.admit_shared(next_req, hit.pages, len(seq))
+            except MemoryError:
+                cache.release(next_req)
+                continue
+            cache.commit(next_req, alloc.pages_of(next_req))
+            live[next_req] = seq
+            next_req += 1
+        elif action == "finish" and live:
+            r = rng.draw(st.sampled_from(sorted(live)))
+            cache.insert(r, live[r])
+            cache.release(r)
+            alloc.free(r)
+            del live[r]
+        elif action == "reclaim":
+            cache.reclaim(rng.draw(st.integers(1, 8)))
+        elif action == "lookup" and next_req:
+            seq = _seq(rng, rng.draw(st.integers(0, 20)),
+                       rng.draw(st.integers(2, 24)))
+            dev, host = cache.peek(seq)
+            assert (dev + host) * PAGE <= len(seq)
+        tree_invariants(cache)
+    for r in sorted(live):
+        cache.release(r)
+        alloc.free(r)
+        tree_invariants(cache)
+    # after releasing every request, all remaining pages belong to the tree
+    assert alloc.pages_in_use == cache.tree.device_pages()
+    # ...and a full reclaim returns the pool to empty
+    cache.reclaim(alloc.n_pages)
+    assert alloc.pages_in_use == 0
+
+
+def test_match_splits_at_page_boundary_and_cows_midpage():
+    alloc, cache = make_cache()
+    seq = np.arange(100, 120, dtype=np.int32)          # 20 tokens, 5 pages
+    pages = alloc.admit(0, len(seq))
+    cache.insert(0, seq)
+    alloc.free(0)
+    # diverge 18 tokens in: 4 full pages shared + 2-token CoW into page 4
+    q = np.concatenate([seq[:18], [7, 8, 9]]).astype(np.int32)
+    hit = cache.lookup(1, q)
+    assert hit.pages == pages[:4]
+    assert hit.matched == 18 and hit.cow_tokens == 2
+    assert hit.cow_src == pages[4]
+    table = alloc.admit_shared(1, hit.pages, len(q))
+    cache.commit(1, table)
+    assert table[:4] == pages[:4] and table[4] not in pages
+    assert cache.stats.cow_copies == 1
+    # fully-cached prompt is capped one token short (first-token logits)
+    full = cache.lookup(2, seq)
+    assert full.matched == 19 and full.matched < len(seq)
+    cache.release(1)
+    cache.release(2)
+    alloc.free(1)
+
+
+def test_lru_eviction_spares_pinned_paths():
+    alloc, cache = make_cache(n_pages=16)
+    a = np.arange(0, 8, dtype=np.int32)
+    b = np.arange(100, 108, dtype=np.int32)
+    for r, seq in enumerate((a, b)):
+        alloc.admit(r, len(seq))
+        cache.insert(r, seq)
+        alloc.free(r)
+    assert cache.reclaimable() == 4
+    hit = cache.lookup(9, np.concatenate([a, [1, 2]]).astype(np.int32))
+    assert len(hit.pages) == 2                  # pinned while "running"
+    assert cache.reclaimable() == 2             # only b's pages evictable
+    freed = cache.reclaim(10)
+    assert freed == 2                           # b evicted, a survives
+    assert cache.tree.device_pages() == 2
+    cache.release(9)
+    assert cache.reclaimable() == 2
+
+
+def test_host_offload_roundtrip_preserves_payload():
+    """swap-out -> drain -> match (swap-in) -> apply restores page bytes."""
+    import jax.numpy as jnp
+    from repro.core.paged_kv import PoolSpec, init_pool
+
+    alloc, cache = make_cache(n_pages=16, host_pages=8)
+    spec = PoolSpec(n_layers=2, n_pages=16, page_size=PAGE, n_kv_heads=1,
+                    d_head=2, max_pages_per_req=6, dtype="float32")
+    pool = init_pool(spec)
+    rng = np.random.default_rng(0)
+    seq = np.arange(50, 58, dtype=np.int32)            # 2 pages
+    pages = alloc.admit(0, len(seq))
+    payload = rng.normal(size=(2, len(pages), PAGE, 1, 2)).astype(np.float32)
+    pool = {"k": pool["k"].at[:, np.asarray(pages)].set(payload),
+            "v": pool["v"].at[:, np.asarray(pages)].set(2 * payload)}
+    cache.pool_ref = lambda: pool
+    cache.insert(0, seq)
+    alloc.free(0)
+    # force the pages out to the host tier
+    freed = cache.reclaim(2)
+    assert freed == 2 and cache.tree.host_pages() == 2
+    assert cache.host.used == 2
+    cache.maintain()                                   # drain to numpy
+    # zero the pool: device copy is gone, only the host copy survives
+    pool = {"k": jnp.zeros_like(pool["k"]), "v": jnp.zeros_like(pool["v"])}
+    hit = cache.lookup(1, np.concatenate([seq, [1, 2]]).astype(np.int32))
+    assert hit.matched == 8 and len(hit.pages) == 2
+    assert cache.host.used == 0 and cache.has_pending
+    pool = cache.apply_pending(pool)
+    np.testing.assert_allclose(
+        np.asarray(pool["k"][:, np.asarray(hit.pages)]), payload, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(pool["v"][:, np.asarray(hit.pages)]), 2 * payload,
+        rtol=1e-6)
+    cache.release(1)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: engine with sharing on vs off
+# ---------------------------------------------------------------------------
+
+def _engine_outputs(cfg, params, *, cache, host=0, n_pages=96, mode="batched",
+                    n_req=5, budget=5):
+    from repro.serving import DecodeEngine, EngineConfig
+    ecfg = EngineConfig(n_slots=3, page_size=PAGE, n_pages=n_pages,
+                        max_context=64, eos_token=-1, prefill_mode=mode,
+                        prefill_chunk=5, prefix_cache=cache, host_pages=host)
+    eng = DecodeEngine(cfg, ecfg, params)
+    rng = np.random.default_rng(1)
+    system = np.arange(2000, 2038, dtype=np.int32)     # 38-token sys prompt
+    for r in range(n_req):
+        sfx = rng.integers(0, cfg.vocab_size, size=int(rng.integers(2, 8)))
+        eng.submit(r, np.concatenate([system, sfx]).astype(np.int32), budget)
+    outs = eng.run(1500)
+    assert eng.batcher.stats.completed == n_req
+    return {k: list(v) for k, v in outs.items()}, eng
+
+
+@pytest.mark.slow
+def test_prefix_sharing_outputs_token_identical():
+    """Greedy outputs with the radix cache (incl. CoW suffix prefill and
+    the host tier under a tight pool) must equal the no-sharing baseline in
+    every prefill mode — and sharing must actually happen."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.models import model as MDL
+
+    cfg = replace(reduced(get_config("llama3.2-1b")), dtype="float32")
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    base, _ = _engine_outputs(cfg, params, cache=False)
+    for mode in ("batched", "slot", "chunked"):
+        got, eng = _engine_outputs(cfg, params, cache=True, mode=mode)
+        assert got == base, mode
+        st = eng.cache.stats
+        assert st.hits > 0 and st.hit_tokens > 0, mode
+        assert st.cow_copies > 0, mode          # 38 % PAGE != 0 -> CoW
+    # tight pool + host tier: watermark offload and swap-in on reuse
+    got, eng = _engine_outputs(cfg, params, cache=True, host=64, n_pages=40)
+    assert got == base
+    ts = eng.cache.host.stats
+    assert ts.swapped_out_pages > 0 and ts.swapped_in_pages > 0
+
+
+@pytest.mark.slow
+def test_shared_pages_and_admitted_kv_beyond_pool():
+    """With 90% shared prompts the engine holds fewer device pages than the
+    no-sharing run and sustains an admitted batch whose summed per-request
+    KV exceeds the device pool."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.models import model as MDL
+    from repro.serving import DecodeEngine, EngineConfig
+
+    cfg = replace(reduced(get_config("llama3.2-1b")), dtype="float32")
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    system = np.arange(3000, 3040, dtype=np.int32)     # 10 pages
+
+    def run(cache, n_pages):
+        ecfg = EngineConfig(n_slots=6, page_size=PAGE, n_pages=n_pages,
+                            max_context=64, eos_token=-1,
+                            prefix_cache=cache, host_pages=64)
+        eng = DecodeEngine(cfg, ecfg, params)
+        rng = np.random.default_rng(2)
+        eng.submit(0, system, 2)                       # warm the prefix
+        eng.run(100)
+        for r in range(1, 7):
+            sfx = rng.integers(0, cfg.vocab_size, size=3)
+            eng.submit(r, np.concatenate([system, sfx]).astype(np.int32), 6)
+        peak_pages = peak_kv = 0
+        finished = None
+        for _ in range(400):
+            if eng.batcher.done():
+                break
+            finished = eng.step(finished)
+            peak_pages = max(peak_pages, eng.alloc.pages_in_use)
+            kv = sum(len(eng.alloc.pages_of(r.req_id))
+                     for r in eng.batcher.slots if r is not None)
+            peak_kv = max(peak_kv, kv)
+        assert eng.batcher.stats.completed == 7
+        return peak_pages, peak_kv, eng
+
+    base_pages, _, _ = run(False, 96)
+    shared_pages, peak_kv, eng = run(True, 40)
+    assert eng.cache.stats.hits >= 6
+    assert shared_pages < base_pages               # measurably fewer pages
+    # per-request KV footprint (counting shared pages per owner) exceeds the
+    # 40-page device pool: the batch is only admissible because pages are
+    # shared / one swap away
+    assert peak_kv > 40
