@@ -42,12 +42,13 @@ def _setup():
     return _PARAMS["cfg"], _PARAMS["params"]
 
 
-def _make_engine(*, cache, n_pages, host_pages=0):
+def _make_engine(*, cache, n_pages, host_pages=0, dedup=True):
     from repro.serving import DecodeEngine, EngineConfig
     cfg, params = _setup()
     ecfg = EngineConfig(n_slots=8, page_size=PAGE, n_pages=n_pages,
                         max_context=544, eos_token=-1,
-                        prefix_cache=cache, host_pages=host_pages)
+                        prefix_cache=cache, host_pages=host_pages,
+                        prefill_dedup=dedup)
     return DecodeEngine(cfg, ecfg, params)
 
 
@@ -123,7 +124,9 @@ def run(emit):
     # pool; watermark pressure offloads the cold tenant's prefix to the
     # host tier and its next wave swaps it back in
     cfg, _ = _setup()
-    eng = _make_engine(cache=True, n_pages=40, host_pages=128)
+    # same-tick dedup off: this scenario is about watermark pressure from
+    # cold bursts landing all at once (dedup would smooth exactly that)
+    eng = _make_engine(cache=True, n_pages=40, host_pages=128, dedup=False)
     sys_a = np.arange(5000, 5512, dtype=np.int32)
     sys_b = np.arange(7000, 7512, dtype=np.int32)
     peak_kv = 0

@@ -5,6 +5,14 @@ The paper's reading: ① cuts the Attention share (token-parallel util), ①②
 grows the batch which shrinks the per-token FC share, ③ removes the
 exposed I/O; combined >60% latency reduction vs baseline for both system
 styles.
+
+``decode_hbm`` section (PR 3): modeled decode-attention HBM bytes/token,
+gathered-dense vs the context-adaptive kernel path, across live context in
+a max-context table — the per-layer traffic term the TCP/ITPP design cuts
+by streaming only LIVE KV tokens. Gathered-dense pays table width x page
+x 3 (pool read + gathered-copy write + dot read); the kernel streams the
+live context once. Same model as benchmarks/kernel_bench.py's measured
+rows; here swept analytically at Qwen-72B geometry.
 """
 from __future__ import annotations
 
@@ -34,4 +42,18 @@ def run(emit):
         emit(f"fig12_claim_{'gpu+lolpim' if hybrid else 'standalone'}_cut",
              0.0,
              f"model={100 * (1 - out[(hybrid, 3)] / base_t):.0f}% paper>60%")
+
+    # ---- decode-attention HBM bytes/token: gathered-dense vs kernel ----
+    page = 256
+    max_ctx = 262_144
+    table_w = -(-max_ctx // page) + 1
+    per_tok = PM.QWEN_72B.kv_bytes_per_token          # all layers, k+v
+    for ctx in (2_048, 32_768, 262_144):
+        dense_gb = 3 * table_w * page * per_tok / 1e9
+        kern_gb = ctx * per_tok / 1e9
+        out[("hbm", ctx)] = (dense_gb, kern_gb)
+        emit(f"decode_hbm_ctx{ctx}", 0.0,
+             f"gathered_dense_GB/tok={dense_gb:.1f} "
+             f"kernel_GB/tok={kern_gb:.2f} cut={dense_gb / kern_gb:.0f}x "
+             f"live_pages={-(-ctx // page)}/{table_w}")
     return out

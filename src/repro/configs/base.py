@@ -187,7 +187,14 @@ class ParallelConfig:
     # memory, extra microbatches only re-run the per-step FSDP weight
     # all-gathers (measured 4x collective waste — EXPERIMENTS.md §Perf).
     microbatches: int = 1
-    use_pallas: bool = False     # pallas kernels (TPU) vs jnp reference (CPU dry-run)
+    # ---- kernel selection (threaded into kernels.backend.KernelConfig) ----
+    # use_pallas: None = autodetect (pallas on TPU, jnp reference elsewhere);
+    # kernel_interpret: None = autodetect (compiled on TPU, interpret off-TPU,
+    # REPRO_KERNEL_INTERPRET env override); kernel_splits: split-K partitions
+    # of the decode page axis inside one kernel call.
+    use_pallas: Optional[bool] = None
+    kernel_interpret: Optional[bool] = None
+    kernel_splits: int = 1
     param_dtype: str = "bfloat16"
     fsdp_params: bool = True     # shard params over the data axis too (ZeRO-3)
     serve_quant: str = ""        # "int8" = weight-only quant on serve paths

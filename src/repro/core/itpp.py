@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.jax_compat import shard_map
 from repro.core.paged_kv import merge_partials, partial_decode_attention
+from repro.kernels.backend import KernelConfig
 
 
 @dataclass(frozen=True)
@@ -59,7 +60,8 @@ def itpp_decode_attention_shard(q, k_new, v_new, pool_k, pool_v, block_table,
                                 mesh_axis_sizes: dict[str, int],
                                 max_pages_per_req: int,
                                 ring_width: int = 0,
-                                cond_window: int = 0):
+                                cond_window: int = 0,
+                                kernels: KernelConfig | None = None):
     """shard_map body (or single-device when spec.page_axes == ()).
 
     q [B,H,D]; k_new/v_new [B,KVH,D]; pool_{k,v} [P_loc, page, KVH, D];
@@ -68,9 +70,18 @@ def itpp_decode_attention_shard(q, k_new, v_new, pool_k, pool_v, block_table,
     be a traced scalar (0 = full attention).
 
     ``cond_window``: for mixed local:global stacks (gemma3), the per-layer
-    traced ``window`` selects between two gather widths via lax.cond —
-    windowed layers fetch only the pages overlapping the (static-size)
-    window instead of the full context (EXPERIMENTS.md §Perf H3).
+    traced ``window`` selects between two widths via lax.cond — windowed
+    layers touch only the pages overlapping the (static-size) window
+    instead of the full context (EXPERIMENTS.md §Perf H3).
+
+    ``kernels``: when it resolves to ``use_pallas``, the shard-local compute
+    is ``kernels.paged_attention.paged_attention_partials`` — K/V pages
+    stream straight from the pool with dead pages (unowned / beyond ctx /
+    out of window / unwritten ring slots) skipped in-kernel, so neither the
+    [B, mp, page, KVH, D] gathered copy nor its HBM traffic exists. The
+    incoming token's K/V scatter rides the same dispatch (the kernel reads
+    the post-write pool). ``None`` (and off-TPU autodetect) keeps the
+    gather-then-dense reference math below — identical semantics, tested.
     Returns (out [B,H,D], pool_k, pool_v).
     """
     B, maxp = block_table.shape
@@ -90,46 +101,87 @@ def itpp_decode_attention_shard(q, k_new, v_new, pool_k, pool_v, block_table,
     vpage = jnp.broadcast_to(jnp.arange(maxp, dtype=jnp.int32)[None], (B, maxp))
     w = jnp.asarray(window, jnp.int32)
 
-    def gather_partial(mp_width: int, window_only: bool):
-        """Va2Pa compaction -> gather -> masked partials at a static width."""
-        # ---- 2. compaction: prioritize owned (and in-window) pages --------
-        pri = owned
-        if window_only:
-            lo_page = jnp.maximum(ctx_len[:, None] - w, 0) // page
-            pri = owned & (vpage >= lo_page)
-        order = jnp.argsort(jnp.where(pri, vpage, maxp + vpage), axis=1,
-                            stable=True)
-        sel = order[:, :mp_width]
-        bt_loc = jnp.take_along_axis(block_table, sel, axis=1) - my * P_loc
-        vp_loc = jnp.take_along_axis(vpage, sel, axis=1)
-        ok_loc = jnp.take_along_axis(pri, sel, axis=1)           # [B,mp]
-        bt_safe = jnp.where(ok_loc, bt_loc, 0)
+    kc = kernels.resolve() if kernels is not None else None
+    if kc is not None and kc.use_pallas:
+        from repro.kernels.paged_attention import paged_attention_partials
+        from repro.kernels.ref import combine_partials
+        H = q.shape[1]
+        KVH = pool_k.shape[2]
+        bt_loc = jnp.where(owned, block_table - my * P_loc, -1)
 
-        # ---- 3. gather + masked partial attention ------------------------
-        k_pages = pool_k[bt_safe]             # [B, mp, page, KVH, D]
-        v_pages = pool_v[bt_safe]
-        if ring_width:
-            cur_vp = ((ctx_len - 1) // page)[:, None]
-            abs_vp = cur_vp - ((cur_vp - vp_loc) % ring_width)
-            ok_loc2 = ok_loc & (abs_vp >= 0)
-            vp_eff = abs_vp
+        def kernel_partial(mp_width: int, window_only: bool):
+            if window_only:
+                # windowed gather bound (cond_window trick): pass only the
+                # table slots overlapping the window; slot j resolves to
+                # virtual page lo+j in-kernel with the SAME lo formula
+                lo = jnp.maximum(ctx_len - w, 0) // page          # [B]
+                sel = lo[:, None] + jnp.arange(mp_width,
+                                               dtype=jnp.int32)[None]
+                btk = jnp.take_along_axis(bt_loc,
+                                          jnp.clip(sel, 0, maxp - 1), axis=1)
+                btk = jnp.where(sel < maxp, btk, -1)
+            else:
+                btk = bt_loc
+            o4, l4, m4 = paged_attention_partials(
+                q.reshape(B, KVH, H // KVH, -1), pool_k, pool_v, btk,
+                ctx_len, window=w, ring_width=ring_width,
+                windowed_slice=window_only, n_splits=kc.n_splits,
+                interpret=kc.interpret)
+            o4, l4, m4 = combine_partials(o4, l4, m4)
+            return (o4.reshape(B, H, -1), l4.reshape(B, H),
+                    m4.reshape(B, H))
+
+        if cond_window > 0:
+            win_pages = min(cond_window // page + 2, maxp)
+            o, l, m = jax.lax.cond(
+                w > 0,
+                lambda: kernel_partial(win_pages, True),
+                lambda: kernel_partial(maxp, False))
         else:
-            ok_loc2, vp_eff = ok_loc, vp_loc
-        tok = vp_eff[:, :, None] * page + jnp.arange(page)[None, None, :]
-        valid = ok_loc2[:, :, None] & (tok < ctx_len[:, None, None])
-        valid = valid & ((w <= 0) | (tok >= (ctx_len[:, None, None] - w)))
-        return partial_decode_attention(q, k_pages, v_pages, valid)
-
-    mp_full = min(spec.max_local_pages(max_pages_per_req), maxp)
-    if cond_window > 0:
-        win_pages = cond_window // page + 2          # pages spanning a window
-        mp_win = min(-(-win_pages // spec.stripe) + 1, maxp)
-        o, l, m = jax.lax.cond(
-            w > 0,
-            lambda: gather_partial(mp_win, True),
-            lambda: gather_partial(mp_full, False))
+            o, l, m = kernel_partial(maxp, False)
     else:
-        o, l, m = gather_partial(mp_full, False)
+        def gather_partial(mp_width: int, window_only: bool):
+            """Va2Pa compaction -> gather -> masked partials, static width."""
+            # ---- 2. compaction: prioritize owned (and in-window) pages ----
+            pri = owned
+            if window_only:
+                lo_page = jnp.maximum(ctx_len[:, None] - w, 0) // page
+                pri = owned & (vpage >= lo_page)
+            order = jnp.argsort(jnp.where(pri, vpage, maxp + vpage), axis=1,
+                                stable=True)
+            sel = order[:, :mp_width]
+            bt_loc = jnp.take_along_axis(block_table, sel, axis=1) \
+                - my * P_loc
+            vp_loc = jnp.take_along_axis(vpage, sel, axis=1)
+            ok_loc = jnp.take_along_axis(pri, sel, axis=1)       # [B,mp]
+            bt_safe = jnp.where(ok_loc, bt_loc, 0)
+
+            # ---- 3. gather + masked partial attention --------------------
+            k_pages = pool_k[bt_safe]         # [B, mp, page, KVH, D]
+            v_pages = pool_v[bt_safe]
+            if ring_width:
+                cur_vp = ((ctx_len - 1) // page)[:, None]
+                abs_vp = cur_vp - ((cur_vp - vp_loc) % ring_width)
+                ok_loc2 = ok_loc & (abs_vp >= 0)
+                vp_eff = abs_vp
+            else:
+                ok_loc2, vp_eff = ok_loc, vp_loc
+            tok = vp_eff[:, :, None] * page + jnp.arange(page)[None, None, :]
+            valid = ok_loc2[:, :, None] & (tok < ctx_len[:, None, None])
+            valid = valid & ((w <= 0)
+                             | (tok >= (ctx_len[:, None, None] - w)))
+            return partial_decode_attention(q, k_pages, v_pages, valid)
+
+        mp_full = min(spec.max_local_pages(max_pages_per_req), maxp)
+        if cond_window > 0:
+            win_pages = cond_window // page + 2      # pages spanning a window
+            mp_win = min(-(-win_pages // spec.stripe) + 1, maxp)
+            o, l, m = jax.lax.cond(
+                w > 0,
+                lambda: gather_partial(mp_win, True),
+                lambda: gather_partial(mp_full, False))
+        else:
+            o, l, m = gather_partial(mp_full, False)
 
     # ---- 4. stable merge (EPU aggregation) -------------------------------
     if sharded and spec.merge_axes:
@@ -184,17 +236,21 @@ def make_prefill_writer(mesh, spec: ItppSpec, *, seq_axis: str):
 
 
 def make_itpp_attention(mesh, spec: ItppSpec, *, max_pages_per_req: int,
-                        ring_width: int = 0, cond_window: int = 0):
+                        ring_width: int = 0, cond_window: int = 0,
+                        kernels: KernelConfig | None = None):
     """Build the jit-composable sharded attention op.
 
     Returns f(q, k_new, v_new, pool_k, pool_v, bt, ctx, new_page, new_off,
     window) -> (out, pool_k, pool_v), wrapped in shard_map over the mesh (or
     plain when mesh is None — single-device tests). ``window`` may be traced.
+    ``kernels`` picks the shard-local compute (see
+    ``itpp_decode_attention_shard``).
     """
     sizes = dict(mesh.shape) if mesh is not None else {}
     body = partial(itpp_decode_attention_shard, spec=spec,
                    mesh_axis_sizes=sizes, max_pages_per_req=max_pages_per_req,
-                   ring_width=ring_width, cond_window=cond_window)
+                   ring_width=ring_width, cond_window=cond_window,
+                   kernels=kernels)
     if mesh is None or not spec.page_axes:
         return body
 

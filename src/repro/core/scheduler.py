@@ -69,6 +69,7 @@ class SchedulerStats:
     completed: int = 0
     admitted: int = 0
     preempted: int = 0
+    dedup_deferred: int = 0
     batch_trace: list = field(default_factory=list)
 
     @property
@@ -88,6 +89,12 @@ class ContinuousBatcher:
         # prefix cache + token oracle (see module docstring)
         self.cache = cache
         self.cache_tokens = cache_tokens
+        # same-tick prefix dedup (see _dedup_defer); engines may disable
+        self.dedup = True
+        # per-tick memo of (tokens, dev_pages, host_pages) per queued
+        # candidate: can_admit's capacity estimate and the dedup check
+        # share one token materialization + tree walk
+        self._peek_memo: dict[int, tuple] = {}
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
         self.stats = SchedulerStats()
@@ -190,6 +197,17 @@ class ContinuousBatcher:
         return True
 
     # ------------------------------------------------------------------
+    def _peek_cached(self, req: Request) -> tuple:
+        """(tokens, dev_pages, host_pages) for a queued candidate, memoized
+        for the current tick (peek is an estimate; within-tick staleness is
+        fine and was already inherent to per-call peeks)."""
+        ent = self._peek_memo.get(req.req_id)
+        if ent is None:
+            toks = self.cache_tokens(req, False)
+            dev, host = self.cache.peek(toks)
+            ent = self._peek_memo[req.req_id] = (toks, dev, host)
+        return ent
+
     def cached_pages(self, req: Request) -> int:
         """Device pages a prefix-cache hit would let this queued request
         borrow instead of allocating (admission-capacity estimate).
@@ -197,8 +215,7 @@ class ContinuousBatcher:
         consumes a device page apiece."""
         if self.cache is None:
             return 0
-        dev, _host = self.cache.peek(self.cache_tokens(req, False))
-        return dev
+        return self._peek_cached(req)[1]
 
     def _admit_one(self, req: Request, row: int | None) -> list[int] | None:
         """Allocate a request's prompt footprint, borrowing the cached
@@ -218,36 +235,86 @@ class ContinuousBatcher:
         req.cached_len = hit.matched
         return pages
 
+    def _inflight_prefill_seqs(self) -> list[np.ndarray]:
+        """Token sequences whose KV is being computed right now (admitted
+        but not yet published to the prefix cache) — the same-tick dedup
+        keys."""
+        return [self.cache_tokens(r, False) for r in self.slots
+                if r is not None and not r.kv_written]
+
+    def _dedup_defer(self, req: Request, inflight) -> bool:
+        """Same-tick prefix dedup: if an in-flight prefill already covers
+        more page-aligned prefix of this request than the radix cache
+        would, wait one tick — the leader publishes its prefix at prefill
+        completion, so the deferred request admits with ``cached_len`` set
+        and prefills only the suffix. A cold same-prefix burst then pays
+        ONE full prefill instead of one per slot."""
+        if self.cache is None or not self.dedup or not inflight:
+            return False
+        toks, dev, host = self._peek_cached(req)
+        page = self.alloc.page_size
+        best = 0
+        for seq in inflight:
+            n = min(len(seq), len(toks))
+            if n <= best:
+                continue
+            eq = np.asarray(seq[:n]) == np.asarray(toks[:n])
+            best = max(best, n if eq.all() else int(np.argmax(~eq)))
+        if best // page == 0:
+            return False
+        return best // page > dev + host
+
     def _try_admit(self) -> list[tuple[int, Request]]:
         """Fill empty slots from the queue. Returns [(slot, request)] newly
         admitted (the engine must run prefill for these). With a policy the
         next request is whatever ``policy.select`` picks; the policy must
-        only pick requests that pass ``alloc.can_admit``."""
+        only pick requests that pass ``alloc.can_admit``.
+
+        Dedup-deferred requests are spliced out of the queue for the span
+        of the admission pass (one verdict and one counter tick per
+        request) and restored afterwards, so selection — FCFS or policy —
+        moves on to admissible candidates instead of re-picking a waiting
+        request once per free slot."""
         admitted = []
+        dedup = self.cache is not None and self.dedup and bool(self.queue)
+        inflight = self._inflight_prefill_seqs() if dedup else []
+        deferred: list[tuple[int, Request]] = []
         for s in range(self.n_slots):
-            if self.slots[s] is not None or not self.queue:
+            if self.slots[s] is not None:
                 continue
             row = self._row_of_slot(s) if self.alloc.policy == "row_affine" \
                 else None
-            if self.policy is not None:
-                idx = self.policy.select(self, row)
-                if idx is None:
-                    continue
-            else:                      # seed behavior: strict head-of-line
-                if not self.alloc.can_admit(self.queue[0].prompt_len, row,
-                                            self.cached_pages(self.queue[0])):
-                    continue   # head-of-line blocked on memory; try next tick
-                idx = 0
-            req = self.queue[idx]
-            pages = self._admit_one(req, row)
-            if pages is None:
-                continue               # reclaim couldn't cover it; next tick
-            del self.queue[idx]
-            req.kv_written = False
-            self.slots[s] = req
-            self._snap_admit(s, req, pages)
-            self.stats.admitted += 1
-            admitted.append((s, req))
+            while self.queue:
+                if self.policy is not None:
+                    idx = self.policy.select(self, row)
+                    if idx is None:
+                        break
+                else:                  # seed behavior: strict head-of-line
+                    if not self.alloc.can_admit(
+                            self.queue[0].prompt_len, row,
+                            self.cached_pages(self.queue[0])):
+                        break  # head-of-line blocked on memory; next tick
+                    idx = 0
+                req = self.queue[idx]
+                if inflight and self._dedup_defer(req, inflight):
+                    self.stats.dedup_deferred += 1
+                    deferred.append((idx + len(deferred), req))
+                    del self.queue[idx]
+                    continue           # re-select a candidate for this slot
+                pages = self._admit_one(req, row)
+                if pages is None:
+                    break              # reclaim couldn't cover it; next tick
+                del self.queue[idx]
+                req.kv_written = False
+                self.slots[s] = req
+                self._snap_admit(s, req, pages)
+                self.stats.admitted += 1
+                admitted.append((s, req))
+                if dedup:              # later candidates defer vs this leader
+                    inflight.append(self.cache_tokens(req, False))
+                break
+        for i, req in sorted(deferred, key=lambda t: t[0]):
+            self.queue.insert(min(i, len(self.queue)), req)
         return admitted
 
     def step(self, finished_mask: np.ndarray | None = None):
@@ -259,6 +326,7 @@ class ContinuousBatcher:
         Slots still in chunked prefill are occupied but not active.
         Returns (admitted, active_slots).
         """
+        self._peek_memo.clear()
         if finished_mask is not None:
             for s in np.flatnonzero(finished_mask):
                 if self.slots[s] is not None:
@@ -312,6 +380,11 @@ class ContinuousBatcher:
 
     def context_lens(self) -> np.ndarray:
         return self._ctx.copy()
+
+    def max_live_pages(self) -> int:
+        """High-water mark of per-slot allocated pages — the live width the
+        engine's decode-table bucketing needs."""
+        return int(self._npages.max(initial=0))
 
     def done(self) -> bool:
         return not self.queue and all(s is None for s in self.slots)

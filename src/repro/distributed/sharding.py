@@ -226,18 +226,25 @@ class Plan:
 
     def make_runtime(self, cfg, parallel, *, pool_spec=None,
                      mode: str = "train") -> Runtime:
-        rt = Runtime(constrain=self.constrain, remat=parallel.remat)
+        from repro.kernels.backend import KernelConfig
+        kernels = KernelConfig(use_pallas=parallel.use_pallas,
+                               interpret=parallel.kernel_interpret,
+                               n_splits=parallel.kernel_splits)
+        rt = Runtime(constrain=self.constrain, remat=parallel.remat,
+                     kernels=kernels)
         if pool_spec is not None:
             rt.ring_width = pool_spec.max_pages_per_req if pool_spec.ring else 0
             if mode == "decode":
                 spec = self.itpp_spec(parallel.page_size)
                 kinds = set(cfg.block_kinds())
                 mixed = "local" in kinds and "attn" in kinds
+                rt.cond_window = cfg.sliding_window if mixed else 0
                 rt.itpp = make_itpp_attention(
                     self.mesh, spec,
                     max_pages_per_req=pool_spec.max_pages_per_req,
                     ring_width=rt.ring_width,
-                    cond_window=cfg.sliding_window if mixed else 0)
+                    cond_window=rt.cond_window,
+                    kernels=kernels)
             if mode == "prefill" and not pool_spec.ring \
                     and self.train_layout == "sp" and self.seq_divisible:
                 from repro.core.itpp import make_prefill_writer

@@ -1,0 +1,70 @@
+"""Backend autodetection + the KernelConfig threaded through the stack.
+
+One knob object rides from ``configs.ParallelConfig`` / ``launch.serve``
+through ``models.model.Runtime`` down to the Pallas call sites
+(``kernels/ops.py``, ``core/itpp.py``): *which* compute path serves the
+decode hot path and *how* the kernels execute.
+
+Resolution rules (``KernelConfig.resolve``):
+
+* ``use_pallas=None``  -> True on a TPU backend, False elsewhere (the
+  pure-jnp reference math IS the production path off-TPU — identical
+  semantics, tested);
+* ``interpret=None``   -> False on TPU (compile via Mosaic), True elsewhere
+  (Pallas interpret mode for correctness tests on CPU), overridable with
+  the ``REPRO_KERNEL_INTERPRET`` env var (``1``/``0``).
+
+The dataclass is frozen/hashable so it can ride as a jit static argument
+and through ``functools.partial`` into shard_map bodies.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+
+_FALSY = ("0", "false", "no", "off", "")
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # backend discovery can fail in exotic envs
+        return False
+
+
+def default_interpret() -> bool:
+    """interpret=False on TPU, True elsewhere; REPRO_KERNEL_INTERPRET wins."""
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in _FALSY
+    return not on_tpu()
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """How the decode hot path executes (see module docstring).
+
+    ``n_splits``: split-K partitions of the page axis inside one kernel
+    call — the intra-chip analogue of the paper's TCP token split (shards
+    are the inter-chip one). 1 = online-softmax over all pages in a single
+    sequential pass.
+    """
+    use_pallas: bool | None = None
+    interpret: bool | None = None
+    n_splits: int = 1
+
+    def resolve(self) -> "KernelConfig":
+        return KernelConfig(
+            use_pallas=on_tpu() if self.use_pallas is None else
+            bool(self.use_pallas),
+            interpret=resolve_interpret(self.interpret),
+            n_splits=max(1, int(self.n_splits)))
+
+
+DEFAULT_KERNELS = KernelConfig()

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -74,7 +76,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
                         q_offset: int = 0, q_blk: int = 256,
-                        kv_blk: int = 256, interpret: bool = True):
+                        kv_blk: int = 256, interpret: bool | None = None):
     """q [B, Sq, H, D]; k/v [B, Skv, KVH, D] -> [B, Sq, H, D].
 
     Static causal/window (per-layer kernels are built per window value).
@@ -115,6 +117,6 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
             pltpu.VMEM((G, q_blk), jnp.float32),
             pltpu.VMEM((G, q_blk, D), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qg.transpose(0, 2, 3, 1, 4), k, v)
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)

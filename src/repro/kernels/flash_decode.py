@@ -46,17 +46,24 @@ def _kernel(ctx_ref, q_ref, k_ref, v_ref, o_ref, l_ref, m_ref, *,
 
 
 def flash_decode(q, k, v, ctx_lens, *, n_splits: int = 8,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """q [B, KVH, G, D]; k/v [B, T, KVH, D]; ctx_lens [B].
 
+    ``T`` need not divide ``n_splits``: the tail split is zero-padded and
+    the in-kernel ctx mask (ctx clamped to T) keeps pad tokens dead.
     Returns per-split fp32 partials (o [S,B,KVH,G,D], l [S,B,KVH,G],
     m [S,B,KVH,G]) for the stable ITPP merge (ref.merge_flash_partials /
     core.paged_kv.merge_partials).
     """
+    from repro.kernels.backend import resolve_interpret
     B, KVH, G, D = q.shape
     T = k.shape[1]
-    assert T % n_splits == 0, (T, n_splits)
-    split = T // n_splits
+    split = -(-T // n_splits)
+    if split * n_splits != T:
+        pad = split * n_splits - T
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ctx_lens = jnp.minimum(ctx_lens, T)
     grid = (B, KVH, n_splits)
     kernel = functools.partial(_kernel, split=split)
 
@@ -94,5 +101,5 @@ def flash_decode(q, k, v, ctx_lens, *, n_splits: int = 8,
             jax.ShapeDtypeStruct((n_splits, B, KVH, G), jnp.float32),
             jax.ShapeDtypeStruct((n_splits, B, KVH, G), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(ctx_lens.astype(jnp.int32), q, k, v)

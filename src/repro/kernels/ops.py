@@ -1,15 +1,23 @@
 """jit'd wrappers around the Pallas kernels, with reference fallbacks.
 
-On the TPU target, pass ``use_pallas=True`` (ParallelConfig.use_pallas) to
-run the kernels compiled; on CPU (this container) the kernels execute in
-interpret mode for correctness tests while production paths lower the
-pure-jnp reference math (identical semantics — tests assert allclose).
+Backend selection is automatic (``kernels/backend.py``): ``use_pallas=None``
+resolves to True on TPU and False elsewhere, and ``interpret=None`` resolves
+to False on TPU / True elsewhere (override with ``REPRO_KERNEL_INTERPRET``).
+Off-TPU production paths therefore lower the pure-jnp reference math while
+tests force ``interpret=True`` to exercise the kernels themselves — the
+semantics are identical (tests assert allclose).
 
 Integration points:
-  * ``decode_attention`` — full-attention decode over the paged pool
-    (core/itpp.py's shard-local gather+partial math, kernelized),
+  * ``paged_decode_step`` — THE decode hot path: the incoming token's K/V
+    write and the context-adaptive paged-attention kernel in one dispatch
+    (core/itpp.py's shard body on a single shard),
+  * ``decode_attention`` — full-attention decode over the paged pool,
   * ``itpp_partials``   — split-K partials for the cross-shard merge,
   * ``mamba_mixer``     — Mamba2 chunk scan for train/prefill.
+
+``KernelConfig`` (re-exported from ``kernels/backend.py``) is the single
+knob object threaded from configs/launch through ``models.model.Runtime``
+down to these call sites.
 """
 from __future__ import annotations
 
@@ -19,27 +27,60 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as REF
+from repro.kernels.backend import (DEFAULT_KERNELS, KernelConfig,
+                                   default_interpret, on_tpu)
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssm_scan import ssm_chunk_scan
 
+__all__ = ["KernelConfig", "DEFAULT_KERNELS", "decode_attention",
+           "paged_decode_step", "itpp_partials", "attention_fwd",
+           "mamba_mixer", "merge_partials"]
 
-@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+
+def _resolve(use_pallas: bool | None) -> bool:
+    return on_tpu() if use_pallas is None else bool(use_pallas)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "n_splits"))
 def decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
-                     use_pallas: bool = True, interpret: bool = True):
+                     use_pallas: bool | None = None,
+                     interpret: bool | None = None, n_splits: int = 1):
     """q [B, KVH, G, D] -> [B, KVH, G, D] (q.dtype)."""
-    if use_pallas:
+    if _resolve(use_pallas):
         return paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
-                               interpret=interpret)
+                               n_splits=n_splits, interpret=interpret)
     return REF.paged_attention_ref(q, k_pages, v_pages, block_tables,
                                    ctx_lens).astype(q.dtype)
 
 
+@partial(jax.jit, static_argnames=("ring_width", "cond_window", "kernels"))
+def paged_decode_step(q, k_new, v_new, pool_k, pool_v, block_table, ctx_len,
+                      new_page, new_off, window=0, *, ring_width: int = 0,
+                      cond_window: int = 0,
+                      kernels: KernelConfig = DEFAULT_KERNELS):
+    """One decode step's attention against the paged pool, single shard:
+    the incoming token's K/V scatter AND the context-adaptive attention in
+    one dispatch. q [B, H, D]; k_new/v_new [B, KVH, D];
+    pool_{k,v} [P, page, KVH, D]; block_table [B, maxp]; ctx_len [B]
+    (INCLUDING the new token); ``window`` may be traced.
+    Returns (out [B, H, D], pool_k, pool_v).
+    """
+    from repro.core.itpp import ItppSpec, itpp_decode_attention_shard
+    spec = ItppSpec((), (), None, 1, 1, pool_k.shape[1])
+    return itpp_decode_attention_shard(
+        q, k_new, v_new, pool_k, pool_v, block_table, ctx_len, new_page,
+        new_off, window, spec=spec, mesh_axis_sizes={},
+        max_pages_per_req=block_table.shape[1], ring_width=ring_width,
+        cond_window=cond_window, kernels=kernels)
+
+
 @partial(jax.jit, static_argnames=("n_splits", "use_pallas", "interpret"))
 def itpp_partials(q, k, v, ctx_lens, *, n_splits: int = 8,
-                  use_pallas: bool = True, interpret: bool = True):
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None):
     """Split-K partials (o, l, m) for the stable ITPP/EPU merge."""
-    if use_pallas:
+    if _resolve(use_pallas):
         return flash_decode(q, k, v, ctx_lens, n_splits=n_splits,
                             interpret=interpret)
     return REF.flash_decode_ref(q, k, v, ctx_lens, n_splits)
@@ -48,9 +89,10 @@ def itpp_partials(q, k, v, ctx_lens, *, n_splits: int = 8,
 @partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
                                    "interpret"))
 def attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
-                  use_pallas: bool = True, interpret: bool = True):
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None):
     """Forward flash attention (prefill/training fwd): [B,S,H,D] -> same."""
-    if use_pallas:
+    if _resolve(use_pallas):
         from repro.kernels.flash_attention import flash_attention_fwd
         return flash_attention_fwd(q, k, v, causal=causal, window=window,
                                    interpret=interpret)
@@ -60,9 +102,10 @@ def attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
 
 @partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
 def mamba_mixer(q, k, v, log_a, log_g, *, chunk: int = 128,
-                use_pallas: bool = True, interpret: bool = True):
+                use_pallas: bool | None = None,
+                interpret: bool | None = None):
     """Chunked selective scan -> (y [B,S,H,P] f32, state [B,H,N,P] f32)."""
-    if use_pallas:
+    if _resolve(use_pallas):
         return ssm_chunk_scan(q, k, v, log_a, log_g, chunk=chunk,
                               interpret=interpret)
     y, (C, _, _) = REF.ssm_chunk_scan_ref(q, k, v, log_a, log_g, None, chunk)

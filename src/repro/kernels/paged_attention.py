@@ -5,15 +5,37 @@ scalar-prefetch operands so each grid step's ``BlockSpec`` index_map resolves
 the *physical* page to stream HBM->VMEM — command-stream-free dynamic paging,
 exactly the paper's Dyn-Modi operand rewriting (§5.2) mapped onto Pallas.
 
-Grid: (batch, kv_head, n_pages). The page axis is innermost and iterates
-sequentially per (b, h) on TPU, so the online-softmax accumulators (m, l, o)
-live in VMEM scratch across pages, and the multi-step grid gives automatic
-double-buffering of the K/V page streams — the paper's ping-pong I/O
-buffering (§6) realized by the Pallas pipeline rather than explicit mux logic.
+Two entry points:
 
-Tile shapes: K/V pages are [page_size, D] per (kv-head); with page_size=256,
-D=128 the MXU operands are 128-aligned. q tile is [G, D] (G = query heads per
-kv head).
+* ``paged_attention_partials`` — the decode hot path's shard-local compute
+  (``core/itpp.py``). Grid ``(B, KVH, n_splits, slots_per_split)``; each
+  split emits an UNNORMALIZED ``(o, l, m)`` partial, exactly the shape the
+  paper's §4.3 EPU aggregation merges across token partitions — so one
+  kernel serves both the cross-shard ITPP merge and flash-decoding-style
+  split-K parallelism on a single chip. Nothing is gathered: K/V pages
+  stream straight out of the pool (the multi-step grid double-buffers the
+  page stream — the paper's ping-pong I/O, §6), replacing the
+  gather-then-dense path's [B, maxp, page, KVH, D] HBM materialization.
+* ``paged_attention`` — convenience full attention (partials merged and
+  normalized), the single-shard kernel used by ``kernels/ops.py``.
+
+Context-adaptive: a table slot whose page holds no live token for this
+request — ``-1`` padding / unowned under ITPP, beyond ``ctx_len``, fully
+below a sliding window, or an unwritten ring slot — is skipped with a
+``pl.when`` early-out, so per-step work tracks the LIVE context rather than
+the block-table width (the bandwidth fix LoL-PIM/PAM attribute to
+context-aware KV streaming). The engine buckets the table width itself
+(serving/engine.py) so even the grid tracks live pages.
+
+Feature matrix (mirrors the gather-then-dense reference semantics):
+  * ``window``       traced per-layer sliding window ([B] or scalar; 0=off),
+  * ``ring_width``   sliding-window ring pools — table slots recycle
+                     ``mod ring_width``, slot -> virtual page resolved
+                     in-kernel from ``ctx_len``,
+  * ``windowed_slice`` the cond_window trick: the caller passes only the
+                     table slots overlapping the window; slot ``j`` maps to
+                     virtual page ``max(ctx-w,0)//page + j``,
+  * GQA ``G>=1``     q tile is [G, D] per kv head; K/V never repeated.
 """
 from __future__ import annotations
 
@@ -24,87 +46,165 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, ctx_ref,                 # scalar prefetch
-            q_ref, k_ref, v_ref,             # VMEM tiles
-            o_ref,                           # output tile
-            m_s, l_s, acc_s,                 # scratch
-            *, page: int, n_pages: int):
+def _partials_kernel(bt_ref, ctx_ref, w_ref,         # scalar prefetch
+                     q_ref, k_ref, v_ref,            # VMEM tiles
+                     o_ref, l_ref, m_ref,            # per-split partials
+                     m_s, l_s, acc_s,                # scratch
+                     *, page: int, slots_per_split: int, ring_width: int,
+                     windowed_slice: bool):
     b = pl.program_id(0)
-    i = pl.program_id(2)
+    s = pl.program_id(2)
+    j = pl.program_id(3)
+    slot = s * slots_per_split + j
 
-    @pl.when(i == 0)
+    @pl.when(j == 0)
     def _init():
         m_s[...] = jnp.full_like(m_s, NEG_INF)
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
 
-    q = q_ref[0, 0].astype(jnp.float32)                   # [G, D]
-    k = k_ref[0, :, 0, :].astype(jnp.float32)             # [page, D]
-    v = v_ref[0, :, 0, :].astype(jnp.float32)
-    d = q.shape[-1]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s = s / jnp.sqrt(jnp.float32(d))                      # [G, page]
-    tok = i * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-    ok = tok < ctx_ref[b]
-    s = jnp.where(ok, s, NEG_INF)
+    ctx = ctx_ref[b]
+    w = w_ref[b]
+    # slot -> virtual page (token positions), per pool policy
+    if ring_width:
+        cur_vp = (ctx - 1) // page
+        vp = cur_vp - ((cur_vp - slot) % ring_width)   # < 0: never written
+    elif windowed_slice:
+        vp = jnp.maximum(ctx - w, 0) // page + slot
+    else:
+        vp = slot
+    lo_tok = jnp.where(w > 0, ctx - w, 0)
+    pid = bt_ref[b, slot]
+    # context-adaptive early-out: dead pages cost neither FLOPs nor scratch
+    live = ((pid >= 0) & (vp >= 0) & (vp * page < ctx)
+            & ((vp + 1) * page > lo_tok))
 
-    m_prev = m_s[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=1))            # [G]
-    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_s[...] = l_s[...] * corr + p.sum(axis=1)
-    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_s[...] = m_new
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [page, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        d = q.shape[-1]
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        sc = sc / jnp.sqrt(jnp.float32(d))                 # [G, page]
+        tok = vp * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        ok = (tok < ctx) & (tok >= lo_tok)
+        sc = jnp.where(ok, sc, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=1))        # [G]
+        p = jnp.where(ok, jnp.exp(sc - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(axis=1)
+        acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
 
-    @pl.when(i == n_pages - 1)
-    def _done():
-        o_ref[0, 0] = (acc_s[...]
-                       / jnp.maximum(l_s[...], 1e-30)[:, None]
-                       ).astype(o_ref.dtype)
+    @pl.when(j == slots_per_split - 1)
+    def _emit():
+        o_ref[0, 0, 0] = acc_s[...]
+        l_ref[0, 0, 0] = l_s[...]
+        m_ref[0, 0, 0] = m_s[...]
 
 
-def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
-                    interpret: bool = True):
-    """q [B, KVH, G, D]; k_pages/v_pages [P, page, KVH, D];
-    block_tables [B, maxp] int32 (-1 padded; clamped to 0, masked by ctx);
-    ctx_lens [B] int32. Returns [B, KVH, G, D] in q.dtype.
+def paged_attention_partials(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                             window=None, ring_width: int = 0,
+                             windowed_slice: bool = False, n_splits: int = 1,
+                             interpret: bool | None = None):
+    """Split-K decode-attention partials over a paged pool.
+
+    q [B, KVH, G, D]; k_pages/v_pages [P, page, KVH, D];
+    block_tables [B, W] int32 — physical page per table slot, ``-1`` = dead
+    (pad / unowned shard-locally / out of window); ctx_lens [B] int32 tokens
+    INCLUDING the current one; ``window`` traced [B] or scalar (0 = full);
+    ``ring_width``/``windowed_slice`` per the module docstring (mutually
+    exclusive). Returns fp32 UNNORMALIZED partials
+    (o [S, B, KVH, G, D], l [S, B, KVH, G], m [S, B, KVH, G]) for the
+    stable EPU merge (``ref.combine_partials`` locally, ``pl`` collectives
+    across shards).
     """
+    assert not (ring_width and windowed_slice)
+    assert not (windowed_slice and window is None), \
+        "windowed_slice slot mapping is defined by the window bound"
     B, KVH, G, D = q.shape
-    P_, page, _, _ = k_pages.shape
-    maxp = block_tables.shape[1]
-    bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+    page = k_pages.shape[1]
+    W = block_tables.shape[1]
+    S = max(1, min(int(n_splits), W))
+    K = -(-W // S)
+    if S * K != W:                      # pad tail split with dead slots
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, S * K - W)),
+                               constant_values=-1)
+    bt = block_tables.astype(jnp.int32)
+    w_arr = (jnp.zeros((B,), jnp.int32) if window is None else
+             jnp.broadcast_to(jnp.asarray(window, jnp.int32).reshape(-1),
+                              (B,)))
 
-    grid = (B, KVH, maxp)
+    grid = (B, KVH, S, K)
 
-    def q_map(b, h, i, bt_ref, ctx_ref):
+    def q_map(b, h, s, j, bt_ref, ctx_ref, w_ref):
         return (b, h, 0, 0)
 
-    def kv_map(b, h, i, bt_ref, ctx_ref):
-        return (bt_ref[b, i], 0, h, 0)
+    def kv_map(b, h, s, j, bt_ref, ctx_ref, w_ref):
+        # dead slots clamp to page 0: the fetch is pipelined away when the
+        # index repeats, and pl.when skips their compute either way
+        return (jnp.maximum(bt_ref[b, s * K + j], 0), 0, h, 0)
 
-    kernel = functools.partial(_kernel, page=page, n_pages=maxp)
+    def po_map(b, h, s, j, bt_ref, ctx_ref, w_ref):
+        return (s, b, h, 0, 0)
+
+    def pl_map(b, h, s, j, bt_ref, ctx_ref, w_ref):
+        return (s, b, h, 0)
+
+    kernel = functools.partial(_partials_kernel, page=page,
+                               slots_per_split=K, ring_width=ring_width,
+                               windowed_slice=windowed_slice)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, G, D), q_map),
                 pl.BlockSpec((1, page, 1, D), kv_map),
                 pl.BlockSpec((1, page, 1, D), kv_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, G, D), q_map),
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, G, D), po_map),
+                pl.BlockSpec((1, 1, 1, G), pl_map),
+                pl.BlockSpec((1, 1, 1, G), pl_map),
+            ],
             scratch_shapes=[
                 pltpu.VMEM((G,), jnp.float32),      # m
                 pltpu.VMEM((G,), jnp.float32),      # l
                 pltpu.VMEM((G, D), jnp.float32),    # acc
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
-        interpret=interpret,
-    )(bt, ctx_lens.astype(jnp.int32), q, k_pages, v_pages)
+        out_shape=[
+            jax.ShapeDtypeStruct((S, B, KVH, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((S, B, KVH, G), jnp.float32),
+            jax.ShapeDtypeStruct((S, B, KVH, G), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(bt, ctx_lens.astype(jnp.int32), w_arr, q, k_pages, v_pages)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                    window=None, ring_width: int = 0, n_splits: int = 1,
+                    interpret: bool | None = None):
+    """Full (normalized) decode attention — partials merged on-device.
+
+    q [B, KVH, G, D]; k_pages/v_pages [P, page, KVH, D];
+    block_tables [B, maxp] int32 (-1 padded); ctx_lens [B] int32.
+    Returns [B, KVH, G, D] in q.dtype.
+    """
+    from repro.kernels.ref import combine_partials
+    o, l, m = paged_attention_partials(
+        q, k_pages, v_pages, block_tables, ctx_lens, window=window,
+        ring_width=ring_width, n_splits=n_splits, interpret=interpret)
+    o, l, _ = combine_partials(o, l, m)
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

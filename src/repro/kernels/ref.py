@@ -32,14 +32,20 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens):
 def flash_decode_ref(q, k, v, ctx_len, n_splits: int):
     """ITPP split-K decode partials oracle.
 
-    q [B, KVH, G, D]; k/v [B, T, KVH, D]; ctx_len [B].
+    q [B, KVH, G, D]; k/v [B, T, KVH, D]; ctx_len [B]. ``T`` need not divide
+    ``n_splits``: the tail split is zero-padded and masked (same split
+    boundaries as the kernel, so partials compare elementwise).
     Returns per-split partials (o [S,B,KVH,G,D], l [S,B,KVH,G], m [S,...])
     whose stable merge equals full attention.
     """
     B, KVH, G, D = q.shape
     T = k.shape[1]
-    assert T % n_splits == 0
-    w = T // n_splits
+    w = -(-T // n_splits)
+    if w * n_splits != T:
+        pad = w * n_splits - T
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ctx_len = jnp.minimum(ctx_len, T)      # pad tokens are never live
     outs, ls, ms = [], [], []
     for s in range(n_splits):
         ks = k[:, s * w:(s + 1) * w].astype(jnp.float32)
@@ -61,11 +67,18 @@ def flash_decode_ref(q, k, v, ctx_len, n_splits: int):
 
 def merge_flash_partials(o, l, m):
     """(S,...) partials -> merged attention output (log-sum-exp merge)."""
+    og, lg, _ = combine_partials(o, l, m)
+    return og / jnp.maximum(lg, 1e-30)[..., None]
+
+
+def combine_partials(o, l, m):
+    """Merge the leading split axis of (o, l, m) partials WITHOUT
+    normalizing — the result is itself a valid partial (associativity of
+    the EPU aggregation: intra-chip split-K merges first, the cross-shard
+    ITPP merge finishes the job)."""
     mg = m.max(0)
     c = jnp.exp(m - mg[None])
-    lg = (l * c).sum(0)
-    og = (o * c[..., None]).sum(0)
-    return og / jnp.maximum(lg, 1e-30)[..., None]
+    return (o * c[..., None]).sum(0), (l * c).sum(0), mg
 
 
 def ssm_chunk_scan_ref(q, k, v, log_a, log_g, h0, chunk: int):

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -62,7 +64,7 @@ def _kernel(q_ref, k_ref, v_ref, la_ref, lg_ref, y_ref, hout_ref, state_s, *,
 
 
 def ssm_chunk_scan(q, k, v, log_a, log_g, *, chunk: int = 128,
-                   interpret: bool = True):
+                   interpret: bool | None = None):
     """q,k [B,S,H,N]; v [B,S,H,P]; log_a/log_g [B,S,H].
 
     Returns (y [B,S,H,P] fp32, state [B,H,N,P] fp32) — zero initial state
@@ -104,5 +106,5 @@ def ssm_chunk_scan(q, k, v, log_a, log_g, *, chunk: int = 128,
             jax.ShapeDtypeStruct((B, H, N, P_), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((N, P_), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v, log_a, log_g)

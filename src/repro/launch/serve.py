@@ -38,7 +38,11 @@ def build_engine(args) -> DecodeEngine:
                         prefill_chunk=args.chunk,
                         sched_policy=args.sched_policy,
                         prefix_cache=args.prefix_cache,
-                        host_pages=args.host_pages)
+                        host_pages=args.host_pages,
+                        use_pallas={"auto": None, "on": True,
+                                    "off": False}[args.kernel],
+                        kernel_splits=args.kernel_splits,
+                        decode_bucket=not args.no_decode_bucket)
     return DecodeEngine(cfg, ecfg)
 
 
@@ -89,6 +93,16 @@ def main(argv=None):
                     help="radix prefix sharing across requests")
     ap.add_argument("--host-pages", type=int, default=0,
                     help="host offload tier capacity in pages (0 = none)")
+    ap.add_argument("--kernel", default="auto", choices=["auto", "on", "off"],
+                    help="decode-attention pallas kernel path: auto = on "
+                         "TPU only (interpret autodetected via "
+                         "REPRO_KERNEL_INTERPRET)")
+    ap.add_argument("--kernel-splits", type=int, default=1,
+                    help="split-K partitions of the page axis per kernel "
+                         "call")
+    ap.add_argument("--no-decode-bucket", action="store_true",
+                    help="disable pow2 live-page bucketing of the decode "
+                         "block table")
     args = ap.parse_args(argv)
 
     eng = build_engine(args)

@@ -31,6 +31,7 @@ from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
 from repro.core.itpp import ItppSpec, itpp_decode_attention_shard
+from repro.kernels.backend import KernelConfig
 
 
 # ---------------------------------------------------------------------------
@@ -47,6 +48,11 @@ class Runtime:
     remat: bool = False
     gla_chunk: int = 128
     ring_width: int = 0                              # sliding-window ring pool
+    # decode-attention kernel selection (kernels/backend.py); None keeps the
+    # gather-then-dense reference path unconditionally (seed semantics),
+    # KernelConfig() autodetects (pallas on TPU, reference elsewhere)
+    kernels: KernelConfig | None = None
+    cond_window: int = 0                             # windowed-bound lax.cond
 
     def moe_apply(self, p, cfg, x):
         if self.moe is not None:
@@ -60,7 +66,8 @@ class Runtime:
         return itpp_decode_attention_shard(
             q, k, v, pk, pv, bt, ctx, npage, noff, window, spec=spec,
             mesh_axis_sizes={}, max_pages_per_req=bt.shape[1],
-            ring_width=self.ring_width)
+            ring_width=self.ring_width, cond_window=self.cond_window,
+            kernels=self.kernels)
 
 
 DEFAULT_RT = Runtime()

@@ -70,10 +70,20 @@ class EngineConfig:
     sample_seed: int = 0
     # ---- KV-cache hierarchy (repro.kvcache) ----
     prefix_cache: bool = False        # radix prefix sharing across requests
+    prefill_dedup: bool = True        # same-tick prefix dedup at admission
     host_pages: int = 0               # host offload tier capacity (0 = none)
     offload_high: float = 0.85        # device watermarks driving offload
     offload_low: float = 0.60
     cache_evict: str = "lru"
+    # ---- decode hot path (kernels/backend.py KernelConfig) ----
+    use_pallas: bool | None = None    # None = autodetect (pallas on TPU)
+    kernel_interpret: bool | None = None
+    kernel_splits: int = 1
+    # pow2 bucketing of the decode block-table width by live-page count:
+    # per-step attention work tracks actual context, not max_context, with
+    # at most log2(maxp) extra jit specializations (engines with <=16-page
+    # tables skip it — nothing to win there)
+    decode_bucket: bool = True
 
 
 @dataclass
@@ -96,7 +106,13 @@ class DecodeEngine:
                  *, sample: Callable | None = None, policy=None):
         self.cfg = cfg
         self.ecfg = ecfg
-        self.rt = rt or MDL.DEFAULT_RT
+        if rt is None:
+            from repro.kernels.backend import KernelConfig
+            rt = MDL.Runtime(kernels=KernelConfig(
+                use_pallas=ecfg.use_pallas,
+                interpret=ecfg.kernel_interpret,
+                n_splits=ecfg.kernel_splits))
+        self.rt = rt
         self.params = params if params is not None else MDL.init_params(
             cfg, jax.random.PRNGKey(0), jnp.float32)
         kinds = cfg.block_kinds()
@@ -150,6 +166,7 @@ class DecodeEngine:
                 pool_ref=lambda: self.state["pool"])
             self.batcher.cache = self.cache
             self.batcher.cache_tokens = self._cache_tokens
+            self.batcher.dedup = ecfg.prefill_dedup
         self.prefiller = make_prefiller(ecfg.prefill_mode, self)
         self.timing = EngineTiming()
         self._decode_jit = None
@@ -261,6 +278,13 @@ class DecodeEngine:
                          E.n_pages).astype(np.int32)
         noff = np.where(active_mask, np.clip(t, 0, None) % E.page_size,
                         0).astype(np.int32)
+        # context-adaptive table width: slice the Va2Pa table to a pow2
+        # bucket of the batch's live-page high-water mark so decode
+        # attention (kernel grid or gathered width alike) tracks actual
+        # context, not max_context (reuses the prefill bucketing)
+        if E.decode_bucket and W > 16:
+            from repro.serving.prefill import decode_table_bucket
+            bt = bt[:, :decode_table_bucket(self.batcher.max_live_pages(), W)]
         if self._decode_jit is None:
             def fn(params, state, tokens, bt, ctx, npage, noff):
                 return MDL.decode_step(self.cfg, params, state, tokens, bt,

@@ -63,6 +63,14 @@ def _suffix_bucket(n: int, cap: int) -> int:
     return b if b >= n else -(-n // cap) * cap
 
 
+def decode_table_bucket(live_pages: int, width: int) -> int:
+    """Decode block-table width the engine dispatches for a live-page
+    high-water mark: the prefill pow2 bucket with a 16-page floor, capped
+    at the full table width. Shared by serving/engine.py (production) and
+    benchmarks/kernel_bench.py (so the bench measures production widths)."""
+    return min(width, _suffix_bucket(max(16, live_pages), width))
+
+
 def prefill_suffix(eng, fn, grp) -> None:
     """One jitted ``prefill_chunk`` call covering a group of cache-hit
     requests: suffixes padded to a shared bucket length, per-request resume

@@ -9,6 +9,7 @@ except ImportError:              # graceful fallback: example-based driver
     from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+from repro.kernels.backend import KernelConfig, default_interpret
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssm_scan import ssm_chunk_scan
@@ -104,6 +105,203 @@ def test_flash_attention_fwd_sweep(dtype, B, Sq, H, KVH, D, causal, window):
     ref = flash_attention(q, k, v, causal=causal, window=window, kv_chunk=8)
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
                                atol=TOL[dtype] * 3, rtol=TOL[dtype] * 3)
+
+
+# ---------------------------------------------------------------------------
+# decode hot path: kernel vs gathered-dense reference, full feature matrix
+# ---------------------------------------------------------------------------
+
+def _decode_case(*, G, ring, window, partial_ctx, seed=0):
+    """A paged decode step: pool, tables (with -1 pads and one dead batch
+    row), per-request ctx (spanning partial pages when asked), and the
+    incoming token's K/V + write target."""
+    from repro.core.allocator import PageAllocator
+    page, maxp, KVH, D, B = 4, 5, 2, 8, 3
+    H = KVH * G
+    P = B * maxp + 2
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    pool_k = jax.random.normal(key, (P, page, KVH, D), jnp.float32)
+    pool_v = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                               (P, page, KVH, D), jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 2), (B, H, D))
+    k_new = jax.random.normal(jax.random.PRNGKey(seed + 3), (B, KVH, D))
+    v_new = jax.random.normal(jax.random.PRNGKey(seed + 4), (B, KVH, D))
+    ring_width = maxp if ring else 0
+    if ring:
+        # wrapped ring: more context than the ring holds
+        ctx = np.asarray([maxp * page + 3, maxp * page + 1, 0], np.int32)
+    elif partial_ctx:
+        ctx = np.asarray([7, maxp * page, 0], np.int32)   # mid-page + full
+    else:
+        ctx = np.asarray([page, 2 * page, 0], np.int32)
+    perm = rng.permutation(P)
+    bt = np.full((B, maxp), -1, np.int32)
+    npage = np.full((B,), P, np.int32)                    # dead rows drop
+    noff = np.zeros((B,), np.int32)
+    pos = 0
+    for b in range(B):
+        if ctx[b] == 0:
+            continue
+        n_alloc = min(-(-int(ctx[b]) // page), maxp)
+        bt[b, :n_alloc] = perm[pos:pos + n_alloc]
+        pos += n_alloc
+        t = int(ctx[b]) - 1
+        vp = (t // page) % ring_width if ring else t // page
+        npage[b] = bt[b, vp]
+        noff[b] = t % page
+    return dict(q=q, k_new=k_new, v_new=v_new, pool_k=pool_k, pool_v=pool_v,
+                bt=jnp.asarray(bt), ctx=jnp.asarray(ctx),
+                npage=jnp.asarray(npage), noff=jnp.asarray(noff),
+                window=window, ring_width=ring_width, page=page, maxp=maxp)
+
+
+def _run_shard(case, kernels, *, cond_window=0, window=None):
+    from repro.core.itpp import ItppSpec, itpp_decode_attention_shard
+    spec = ItppSpec((), (), None, 1, 1, case["page"])
+    w = case["window"] if window is None else window
+    return itpp_decode_attention_shard(
+        case["q"], case["k_new"], case["v_new"], case["pool_k"],
+        case["pool_v"], case["bt"], case["ctx"], case["npage"], case["noff"],
+        w, spec=spec, mesh_axis_sizes={},
+        max_pages_per_req=case["maxp"], ring_width=case["ring_width"],
+        cond_window=cond_window, kernels=kernels)
+
+
+@pytest.mark.parametrize("G", [1, 4])
+@pytest.mark.parametrize("ring,window,partial_ctx", [
+    (False, 0, False),            # plain, page-aligned ctx
+    (False, 0, True),             # ctx mid-page + exactly-full table
+    (False, 6, True),             # sliding-window mask
+    (True, 9, False),             # ring pool (slots recycle mod width)
+    (True, 0, False),             # ring, unwindowed mask
+])
+@pytest.mark.parametrize("n_splits", [1, 3])
+def test_itpp_kernel_matches_gathered_dense(G, ring, window, partial_ctx,
+                                            n_splits):
+    """The Pallas decode hot path is numerically identical to the
+    gather-then-dense reference across the pool feature matrix, including
+    the folded-in token write."""
+    case = _decode_case(G=G, ring=ring, window=window, partial_ctx=partial_ctx)
+    out_d, pk_d, pv_d = _run_shard(case, None)
+    out_k, pk_k, pv_k = _run_shard(
+        case, KernelConfig(use_pallas=True, interpret=True,
+                           n_splits=n_splits))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_d),
+                               atol=3e-5, rtol=3e-5)
+    np.testing.assert_array_equal(np.asarray(pk_k), np.asarray(pk_d))
+    np.testing.assert_array_equal(np.asarray(pv_k), np.asarray(pv_d))
+
+
+@pytest.mark.parametrize("window", [0, 6])
+def test_itpp_kernel_cond_window_branches(window):
+    """cond_window: the windowed-slice kernel (only the table slots
+    overlapping the window ride the grid) agrees with the dense path for
+    both lax.cond branches of a mixed local:global stack."""
+    case = _decode_case(G=2, ring=False, window=window, partial_ctx=True)
+    out_d, *_ = _run_shard(case, None, cond_window=8)
+    out_k, *_ = _run_shard(
+        case, KernelConfig(use_pallas=True, interpret=True), cond_window=8)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_d),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_itpp_kernel_traced_window_scan():
+    """Per-layer window flags ride a scan as data (gemma3-style): the
+    kernel path must accept a TRACED window scalar."""
+    case = _decode_case(G=2, ring=False, window=0, partial_ctx=True)
+    kc = KernelConfig(use_pallas=True, interpret=True)
+
+    def body(carry, w):
+        out, *_ = _run_shard(case, kc, window=w)
+        return carry, out
+
+    _, outs = jax.jit(lambda ws: jax.lax.scan(body, 0, ws))(
+        jnp.asarray([0, 6], jnp.int32))
+    for i, w in enumerate((0, 6)):
+        ref_out, *_ = _run_shard(case, None, window=jnp.int32(w))
+        np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(ref_out),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_flash_decode_tail_split():
+    """T that does not divide n_splits: the tail split is padded+masked."""
+    B, KVH, G, D, T, S = 2, 2, 2, 8, 21, 4
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, KVH, G, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, KVH, D))
+    ctx = jnp.asarray([T, 5], jnp.int32)
+    o, l, m = flash_decode(q, k, v, ctx, n_splits=S, interpret=True)
+    oref, lref, mref = ref.flash_decode_ref(q, k, v, ctx, S)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lref), atol=1e-5)
+    merged = ref.merge_flash_partials(o, l, m)
+    from repro.models.layers import decode_attention_ref
+    dense = decode_attention_ref(q.reshape(B, KVH * G, D), k, v, ctx)
+    np.testing.assert_allclose(
+        np.asarray(merged.reshape(B, KVH * G, D)), np.asarray(dense),
+        atol=1e-5, rtol=1e-5)
+
+
+def test_backend_autodetect(monkeypatch):
+    """interpret defaults ride the backend; REPRO_KERNEL_INTERPRET wins."""
+    import repro.kernels.backend as BK
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET", raising=False)
+    assert default_interpret() == (jax.default_backend() != "tpu")
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")
+    assert BK.default_interpret() is False
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    assert BK.default_interpret() is True
+    kc = KernelConfig().resolve()
+    assert kc.use_pallas == BK.on_tpu() and kc.interpret is True
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: engine greedy decode, kernel path on vs off
+# ---------------------------------------------------------------------------
+
+def _serve(cfg, params, **ecfg_kw):
+    from repro.serving import DecodeEngine, EngineConfig
+    kw = dict(n_slots=2, page_size=4, n_pages=48, max_context=32,
+              eos_token=-1, prefill_mode="batched")
+    kw.update(ecfg_kw)
+    eng = DecodeEngine(cfg, EngineConfig(**kw), params)
+    rng = np.random.default_rng(3)
+    for r in range(3):
+        eng.submit(r, rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(4, 14))), 4)
+    outs = eng.run(300)
+    assert eng.batcher.stats.completed == 3
+    return {k: list(v) for k, v in outs.items()}
+
+
+@pytest.mark.slow
+def test_engine_kernel_token_identity():
+    """Greedy decode through the serving engine is token-identical with the
+    Pallas decode hot path on vs the gathered-dense path."""
+    from repro.configs import get_config, reduced
+    from dataclasses import replace
+    from repro.models import model as MDL
+    cfg = replace(reduced(get_config("llama3.2-1b")), dtype="float32")
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    dense = _serve(cfg, params, use_pallas=False)
+    kernel = _serve(cfg, params, use_pallas=True, kernel_interpret=True)
+    assert kernel == dense
+
+
+@pytest.mark.slow
+def test_engine_decode_bucketing_token_identity():
+    """pow2 live-page bucketing of the decode table (maxp > 16) does not
+    change greedy outputs."""
+    from repro.configs import get_config, reduced
+    from dataclasses import replace
+    from repro.models import model as MDL
+    cfg = replace(reduced(get_config("llama3.2-1b")), dtype="float32")
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    kw = dict(page_size=2, n_pages=96, max_context=60)   # maxp = 31 > 16
+    full = _serve(cfg, params, decode_bucket=False, **kw)
+    bucketed = _serve(cfg, params, decode_bucket=True, **kw)
+    assert bucketed == full
 
 
 @settings(max_examples=15, deadline=None)

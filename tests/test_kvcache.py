@@ -191,11 +191,12 @@ def test_host_offload_roundtrip_preserves_payload():
 # ---------------------------------------------------------------------------
 
 def _engine_outputs(cfg, params, *, cache, host=0, n_pages=96, mode="batched",
-                    n_req=5, budget=5):
+                    n_req=5, budget=5, **ecfg_kw):
     from repro.serving import DecodeEngine, EngineConfig
     ecfg = EngineConfig(n_slots=3, page_size=PAGE, n_pages=n_pages,
                         max_context=64, eos_token=-1, prefill_mode=mode,
-                        prefill_chunk=5, prefix_cache=cache, host_pages=host)
+                        prefill_chunk=5, prefix_cache=cache, host_pages=host,
+                        **ecfg_kw)
     eng = DecodeEngine(cfg, ecfg, params)
     rng = np.random.default_rng(1)
     system = np.arange(2000, 2038, dtype=np.int32)     # 38-token sys prompt
@@ -227,10 +228,37 @@ def test_prefix_sharing_outputs_token_identical():
         assert st.hits > 0 and st.hit_tokens > 0, mode
         assert st.cow_copies > 0, mode          # 38 % PAGE != 0 -> CoW
     # tight pool + host tier: watermark offload and swap-in on reuse
-    got, eng = _engine_outputs(cfg, params, cache=True, host=64, n_pages=40)
+    # (same-tick dedup off: the burst must land cold all at once to build
+    # the pool pressure this scenario is about)
+    got, eng = _engine_outputs(cfg, params, cache=True, host=64, n_pages=40,
+                               prefill_dedup=False)
     assert got == base
     ts = eng.cache.host.stats
     assert ts.swapped_out_pages > 0 and ts.swapped_in_pages > 0
+
+
+@pytest.mark.slow
+def test_same_tick_dedup_cold_burst():
+    """A cold burst of same-prefix requests submitted in ONE tick prefills
+    the shared prefix once: admission defers followers while the leader's
+    prefill is in flight, and they re-admit as radix hits next tick —
+    outputs stay token-identical to the no-cache baseline."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.models import model as MDL
+
+    cfg = replace(reduced(get_config("llama3.2-1b")), dtype="float32")
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    base, _ = _engine_outputs(cfg, params, cache=False, n_req=3)
+    got, eng = _engine_outputs(cfg, params, cache=True, n_req=3)
+    assert got == base
+    st = eng.batcher.stats
+    # all three arrive cold in tick 1 (3 slots free) — without dedup each
+    # would pay a full prefill; with it, followers wait for the leader
+    assert st.dedup_deferred >= 2
+    cs = eng.cache.stats
+    assert cs.hits >= 2 and cs.hit_tokens >= 2 * 36
 
 
 @pytest.mark.slow
