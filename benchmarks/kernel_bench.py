@@ -20,10 +20,14 @@ Modeled HBM bytes/token per layer (the metric the paper's TCP/ITPP design
 optimizes): gathered-dense reads the table-width KV stream AND writes+reads
 the gathered copy (3x table bytes); the kernel streams live-context KV once.
 
-Run standalone: ``python benchmarks/kernel_bench.py [--smoke]``.
+Run standalone: ``python benchmarks/kernel_bench.py [--smoke] [--json
+PATH]`` — ``--json`` writes the emitted rows plus the decode-step
+latency/error table as machine-readable JSON (``BENCH_kernels.json`` in
+CI) so kernel-path regressions are visible across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -184,9 +188,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write results as JSON (e.g. BENCH_kernels.json)")
     args = ap.parse_args(argv)
 
+    rows = []
+
     def emit(name, us, derived):
+        rows.append({"name": name, "us": us, "derived": derived})
         print(f"{name},{us:.2f},{derived}", flush=True)
 
     out = run(emit, smoke=args.smoke)
@@ -194,6 +203,16 @@ def main(argv=None):
         assert out[k] < 1e-2, (k, out[k])
     for ctx_t, (_, _, err) in out["decode_step"].items():
         assert err < 1e-3, (ctx_t, err)
+    if args.json:
+        doc = {"bench": "kernels", "rows": rows,
+               "maxerr": {k: float(out[k]) for k in
+                          ("paged_attention", "flash_decode", "ssm_scan")},
+               "decode_step": {str(c): {"dense_us": 1e6 * d, "hot_us": 1e6 * h,
+                                        "maxerr": float(e)}
+                               for c, (d, h, e) in out["decode_step"].items()}}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {args.json}")
     print("# kernel_bench OK")
 
 

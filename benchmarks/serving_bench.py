@@ -1,20 +1,31 @@
-"""Serving-engine host overhead + throughput per prefill mode.
+"""Serving-engine host overhead + throughput per prefill mode and decode
+horizon.
 
 Runs the REAL engine (tiny llama, CPU) over one seeded trace under each
 prefill strategy — per-slot (seed path), length-bucketed batched, chunked
-DCS-style interleave — and reports tokens/s, host bookkeeping us/step, and
-prefill seconds. Greedy outputs are asserted token-identical across modes,
-so every gain is pure orchestration (one jit per admission bucket + the
-vectorized config-buffer assembly), not changed math.
+DCS-style interleave — and across fused decode horizons (1 / 4 / 8), and
+reports tokens/s, mean TTFT, decode-step latency, the host_s/decode_s wall
+split and host<->device syncs per token. Greedy outputs are asserted
+token-identical across modes AND horizons, so every gain is pure
+orchestration (one jit per admission bucket, the vectorized config-buffer
+assembly, and the fused multi-step scan amortizing dispatch/sync/sample
+round-trips over K tokens), not changed math.
+
+``--json PATH`` writes the full result table as machine-readable JSON
+(``BENCH_serving.json`` in CI) so the perf trajectory is tracked across
+PRs; ``--smoke`` shrinks the trace for CI.
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import replace
 
 import numpy as np
 
 _PARAMS = {}
+
+HORIZONS = (1, 4, 8)
 
 
 def _setup():
@@ -30,39 +41,120 @@ def _setup():
     return _PARAMS["cfg"], _PARAMS["params"]
 
 
-def bench(mode: str, *, requests: int = 8, chunk: int = 16) -> dict:
+def bench(mode: str, *, requests: int = 8, chunk: int = 16, horizon: int = 1,
+          new_tokens: int = 8, max_prompt: int = 64,
+          warmup: int = 2) -> dict:
+    """One engine over the seeded trace. ``warmup`` requests (same length
+    distribution, ids >= 1000) run first so the timed phase measures
+    steady-state dispatch, not jit compiles; decode throughput is the timed
+    phase's decode tokens over its non-prefill wall."""
     from repro.serving import DecodeEngine, EngineConfig
     cfg, params = _setup()
     ecfg = EngineConfig(n_slots=4, page_size=8, n_pages=160, max_context=128,
-                        eos_token=-1, prefill_mode=mode, prefill_chunk=chunk)
+                        eos_token=-1, prefill_mode=mode, prefill_chunk=chunk,
+                        decode_horizon=horizon)
     eng = DecodeEngine(cfg, ecfg, params)
+    rng = np.random.default_rng(7)
+    for i in range(warmup):
+        eng.submit(1000 + i,
+                   rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(8, max_prompt))),
+                   new_tokens)
+    eng.run(10_000)
+    tm0 = dict(eng.timing.as_dict())
     rng = np.random.default_rng(0)
     for i in range(requests):
-        plen = int(rng.integers(8, 64))
-        eng.submit(i, rng.integers(0, cfg.vocab_size, size=plen), 8)
+        plen = int(rng.integers(8, max_prompt))
+        eng.submit(i, rng.integers(0, cfg.vocab_size, size=plen), new_tokens)
     t0 = time.perf_counter()
-    outs = eng.run(10_000)
+    eng.run(10_000)
     dt = time.perf_counter() - t0
+    outs = {k: v for k, v in eng.outputs.items() if k < 1000}
     toks = sum(len(v) for v in outs.values())
     tm = eng.timing.as_dict()
-    return {"mode": eng.prefiller.name, "tok_s": toks / max(dt, 1e-9),
-            "host_us": tm["host_us_per_step"], "prefill_s": tm["prefill_s"],
-            "wall_s": dt, "outputs": {k: list(v) for k, v in outs.items()}}
+    dtoks = tm["decode_tokens"] - tm0["decode_tokens"]
+    dpre = tm["prefill_s"] - tm0["prefill_s"]
+    syncs = tm["device_syncs"] - tm0["device_syncs"]
+    ttft = [eng.first_tok_t[r] - eng.submit_t[r] for r in outs]
+    return {"mode": eng.prefiller.name, "horizon": horizon,
+            "tok_s": toks / max(dt, 1e-9),
+            "decode_tok_s": dtoks / max(dt - dpre, 1e-9),
+            "ttft_ms": 1e3 * float(np.mean(ttft)) if ttft else 0.0,
+            "decode_step_us": 1e6 * (tm["decode_s"] - tm0["decode_s"])
+            / max(1, dtoks),
+            "host_us": 1e6 * (tm["host_s"] - tm0["host_s"])
+            / max(1, tm["steps"] - tm0["steps"]),
+            "host_s": tm["host_s"],
+            "decode_s": tm["decode_s"], "prefill_s": tm["prefill_s"],
+            "device_syncs": syncs,
+            "syncs_per_token": syncs / max(1, dtoks),
+            "tokens": toks, "wall_s": dt,
+            "outputs": {k: list(v) for k, v in outs.items()}}
 
 
-def run(emit):
-    base = bench("slot")
+def run(emit, *, smoke: bool = False):
+    kw = dict(requests=4, new_tokens=6, warmup=1) if smoke else {}
+    hkw = dict(kw, new_tokens=6 if smoke else 64)   # decode-dominated trace
+    results = []
+    base = bench("slot", horizon=1, **kw)
+    results.append(base)
     emit("serving_prefill_slot", base["host_us"],
          f"tok/s={base['tok_s']:.1f} prefill_s={base['prefill_s']:.2f}")
     for mode in ("batched", "chunked"):
-        r = bench(mode)
+        r = bench(mode, horizon=1, **kw)
+        results.append(r)
         assert r["outputs"] == base["outputs"], \
             f"{mode} prefill changed greedy outputs"
         emit(f"serving_prefill_{mode}", r["host_us"],
              f"tok/s={r['tok_s']:.1f} prefill_s={r['prefill_s']:.2f} "
              f"speedup={r['tok_s'] / max(base['tok_s'], 1e-9):.2f}x")
-    return base
+    # fused decode horizons: same trace, batched prefill; outputs must be
+    # token-identical and host syncs per token must drop ~K-fold
+    h1 = bench("batched", horizon=1, **hkw)
+    results.append(h1)
+    emit("serving_horizon_1", h1["decode_step_us"],
+         f"decode_tok/s={h1['decode_tok_s']:.0f} tok/s={h1['tok_s']:.1f} "
+         f"ttft_ms={h1['ttft_ms']:.1f} "
+         f"syncs/tok={h1['syncs_per_token']:.3f} speedup=1.00x")
+    for h in HORIZONS:
+        if h == 1:
+            continue
+        r = bench("batched", horizon=h, **hkw)
+        results.append(r)
+        assert r["outputs"] == h1["outputs"], \
+            f"decode_horizon={h} changed greedy outputs"
+        emit(f"serving_horizon_{h}", r["decode_step_us"],
+             f"decode_tok/s={r['decode_tok_s']:.0f} tok/s={r['tok_s']:.1f} "
+             f"ttft_ms={r['ttft_ms']:.1f} "
+             f"syncs/tok={r['syncs_per_token']:.3f} "
+             f"speedup={r['decode_tok_s'] / max(h1['decode_tok_s'], 1e-9):.2f}x")
+    return results
+
+
+def write_json(results, path: str) -> None:
+    rows = [{k: v for k, v in r.items() if k != "outputs"} for r in results]
+    with open(path, "w") as f:
+        json.dump({"bench": "serving", "rows": rows}, f, indent=2)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny trace for CI")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write results as JSON (e.g. BENCH_serving.json)")
+    args = ap.parse_args(argv)
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.2f},{derived}", flush=True)
+
+    results = run(emit, smoke=args.smoke)
+    if args.json:
+        write_json(results, args.json)
+        print(f"# wrote {args.json}")
+    print("# serving_bench OK")
+    return results
 
 
 if __name__ == "__main__":
-    run(lambda n, us, d: print(f"{n},{us:.2f},{d}"))
+    main()

@@ -195,6 +195,13 @@ class ParallelConfig:
     use_pallas: Optional[bool] = None
     kernel_interpret: Optional[bool] = None
     kernel_splits: int = 1
+    # fused multi-step decode: serving ticks run this many decode steps
+    # (decode + on-device sampling + EOS/budget masking) under ONE jit, so
+    # the host syncs once per horizon instead of once per token (threads
+    # into serving EngineConfig.decode_horizon / launch.serve
+    # --decode-horizon). 1 = per-token dispatch; greedy outputs are
+    # horizon-invariant.
+    decode_horizon: int = 8
     param_dtype: str = "bfloat16"
     fsdp_params: bool = True     # shard params over the data axis too (ZeRO-3)
     serve_quant: str = ""        # "int8" = weight-only quant on serve paths

@@ -93,8 +93,12 @@ class ContinuousBatcher:
         self.dedup = True
         # per-tick memo of (tokens, dev_pages, host_pages) per queued
         # candidate: can_admit's capacity estimate and the dedup check
-        # share one token materialization + tree walk
+        # share one token materialization + tree walk. ``prefetch_peeks``
+        # lets the fused engine warm it in the overlap window (radix walks
+        # run while the device computes); _peeks_fresh keeps step() from
+        # discarding a prefetched memo.
         self._peek_memo: dict[int, tuple] = {}
+        self._peeks_fresh = False
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
         self.stats = SchedulerStats()
@@ -104,6 +108,12 @@ class ContinuousBatcher:
                     if bt_width else None)
         self._npages = np.zeros((n_slots,), np.int32)
         self._ctx = np.zeros((n_slots,), np.int32)
+        # slots whose snapshot changed since the engine last mirrored them to
+        # the device (admission / growth / free / chunk completion). The
+        # fused-decode engine consumes this via ``take_dirty`` and patches
+        # ONLY these rows of its device-resident slot state — per-tick
+        # config-buffer traffic is O(changes), never a full rebuild.
+        self.dirty: set[int] = set(range(n_slots))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -118,6 +128,7 @@ class ContinuousBatcher:
         self._ctx[s] = req.prompt_len if req.prefill_done else 0
         if self._bt is not None:
             self._bt[s, :len(pages)] = pages
+        self.dirty.add(s)
 
     def _snap_grow(self, s: int, new: list[int]) -> None:
         if new:
@@ -125,12 +136,22 @@ class ContinuousBatcher:
             self._npages[s] = n + len(new)
             if self._bt is not None:
                 self._bt[s, n:n + len(new)] = new
+            self.dirty.add(s)
 
     def _snap_clear(self, s: int) -> None:
         self._npages[s] = 0
         self._ctx[s] = 0
         if self._bt is not None:
             self._bt[s, :] = -1
+        self.dirty.add(s)
+
+    def take_dirty(self) -> list[int]:
+        """Slots whose snapshot changed since the last call (sorted); clears
+        the set. The engine patches exactly these rows of its device-resident
+        block-table/ctx/token/budget arrays before dispatching a horizon."""
+        out = sorted(self.dirty)
+        self.dirty.clear()
+        return out
 
     def _preempt(self, s: int, req: Request) -> None:
         """Pool exhausted mid-decode: free pages, requeue at the front for
@@ -194,7 +215,35 @@ class ContinuousBatcher:
                 self._preempt(s, req)
                 return False
         self._ctx[s] = req.total_len
+        self.dirty.add(s)
         return True
+
+    def reserve_horizon(self, active, k: int) -> np.ndarray:
+        """Best-effort page reservation for a fused ``k``-step decode
+        horizon. ``step()`` already covered each active slot's next token;
+        this grows the allocation to cover up to ``k`` consecutive tokens
+        (clamped by the slot's remaining budget — a finished slot's final
+        sample is never written, so ``prompt + max_new`` pages bound every
+        horizon — and by ``max_context``, matching the per-token growth
+        guard). On pool exhaustion a slot's allowance degrades to whatever
+        its pages already cover instead of preempting: the device mask
+        pauses it mid-horizon and the next tick resumes it, so reservation
+        pressure never changes outputs. Returns ``allow`` [n_slots] int32 —
+        decode steps each slot may run this horizon (0 = not active)."""
+        allow = np.zeros((self.n_slots,), np.int32)
+        for s in active:
+            req = self.slots[s]
+            steps = min(max(1, int(k)),
+                        req.max_new_tokens - req.generated + 1)
+            want = min(req.total_len + steps - 1, self.max_context)
+            if steps > 1 and want > req.total_len:
+                try:
+                    self._snap_grow(s, self.alloc.ensure(req.req_id, want))
+                except MemoryError:
+                    covered = int(self._npages[s]) * self.alloc.page_size
+                    steps = max(1, min(steps, covered - req.total_len + 1))
+            allow[s] = steps
+        return allow
 
     # ------------------------------------------------------------------
     def _peek_cached(self, req: Request) -> tuple:
@@ -207,6 +256,20 @@ class ContinuousBatcher:
             dev, host = self.cache.peek(toks)
             ent = self._peek_memo[req.req_id] = (toks, dev, host)
         return ent
+
+    def prefetch_peeks(self, limit: int | None = None) -> None:
+        """Warm the per-tick peek memo for the first ``limit`` queued
+        candidates — the fused engine's overlap window runs these radix
+        walks while the previous decode horizon is still computing on
+        device. Peeks taken here predate the horizon's finish-inserts, an
+        underestimate the memo's estimate semantics already tolerate."""
+        if self.cache is None or not self.queue:
+            return
+        self._peek_memo.clear()
+        self._peeks_fresh = True
+        for req in list(self.queue)[:limit if limit is not None
+                                    else len(self.queue)]:
+            self._peek_cached(req)
 
     def cached_pages(self, req: Request) -> int:
         """Device pages a prefix-cache hit would let this queued request
@@ -326,7 +389,10 @@ class ContinuousBatcher:
         Slots still in chunked prefill are occupied but not active.
         Returns (admitted, active_slots).
         """
-        self._peek_memo.clear()
+        if self._peeks_fresh:
+            self._peeks_fresh = False
+        else:
+            self._peek_memo.clear()
         if finished_mask is not None:
             for s in np.flatnonzero(finished_mask):
                 if self.slots[s] is not None:

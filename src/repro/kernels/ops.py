@@ -11,6 +11,11 @@ Integration points:
   * ``paged_decode_step`` — THE decode hot path: the incoming token's K/V
     write and the context-adaptive paged-attention kernel in one dispatch
     (core/itpp.py's shard body on a single shard),
+  * ``write_targets``   — per-step Va2Pa write-target resolution (npage/noff
+    with idle/frozen slots routed out of bounds so the scatter drops them);
+    the device-side half of the host "configuration buffer" update, used by
+    the fused multi-step decode (``models.model.decode_multi``) to advance
+    write positions on device between host syncs,
   * ``decode_attention`` — full-attention decode over the paged pool,
   * ``itpp_partials``   — split-K partials for the cross-shard merge,
   * ``mamba_mixer``     — Mamba2 chunk scan for train/prefill.
@@ -34,12 +39,35 @@ from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssm_scan import ssm_chunk_scan
 
 __all__ = ["KernelConfig", "DEFAULT_KERNELS", "decode_attention",
-           "paged_decode_step", "itpp_partials", "attention_fwd",
-           "mamba_mixer", "merge_partials"]
+           "paged_decode_step", "write_targets", "itpp_partials",
+           "attention_fwd", "mamba_mixer", "merge_partials"]
 
 
 def _resolve(use_pallas: bool | None) -> bool:
     return on_tpu() if use_pallas is None else bool(use_pallas)
+
+
+def write_targets(block_table, ctx, run, *, page_size: int, n_pages: int,
+                  ring_width: int = 0):
+    """Resolve the KV write target for each slot's incoming token.
+
+    ``block_table`` [B, W] int32 Va2Pa; ``ctx`` [B] context INCLUDING the
+    incoming token; ``run`` [B] bool — slots decoding this step. Inactive /
+    frozen slots target page ``n_pages`` (out of bounds) so the pool scatter
+    drops their write. Traceable: the fused decode scan calls this once per
+    step on device; the per-token ``serving.engine.step`` keeps a host-numpy
+    twin of the same resolution (kept deliberately eager-free there) — the
+    two must stay bit-identical. Returns (npage [B], noff [B]) int32.
+    """
+    B, W = block_table.shape
+    t = jnp.maximum(jnp.asarray(ctx, jnp.int32) - 1, 0)
+    vp = t // page_size
+    if ring_width:
+        vp = vp % ring_width
+    npage = block_table[jnp.arange(B), jnp.minimum(vp, W - 1)]
+    npage = jnp.where(run, npage, n_pages).astype(jnp.int32)
+    noff = jnp.where(run, t % page_size, 0).astype(jnp.int32)
+    return npage, noff
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "n_splits"))

@@ -8,14 +8,20 @@ exactly the paper's Dyn-Modi operand rewriting (§5.2) mapped onto Pallas.
 Two entry points:
 
 * ``paged_attention_partials`` — the decode hot path's shard-local compute
-  (``core/itpp.py``). Grid ``(B, KVH, n_splits, slots_per_split)``; each
+  (``core/itpp.py``). Grid ``(n_splits, B, KVH, slots_per_split)``; each
   split emits an UNNORMALIZED ``(o, l, m)`` partial, exactly the shape the
   paper's §4.3 EPU aggregation merges across token partitions — so one
   kernel serves both the cross-shard ITPP merge and flash-decoding-style
-  split-K parallelism on a single chip. Nothing is gathered: K/V pages
-  stream straight out of the pool (the multi-step grid double-buffers the
-  page stream — the paper's ping-pong I/O, §6), replacing the
-  gather-then-dense path's [B, maxp, page, KVH, D] HBM materialization.
+  split-K parallelism on a single chip. The split-K axis LEADS the grid and
+  is declared ``parallel`` in the Mosaic ``dimension_semantics`` (parallel
+  axes must prefix the arbitrary ones), so megacore partitioning fans the
+  splits out across TensorCores instead of running them sequentially on
+  one — each (split, batch, head) owns its own scratch accumulation over
+  the trailing ``arbitrary`` slot axis, so the partition is race-free and
+  numerically identical. Nothing is gathered: K/V pages stream straight out
+  of the pool (the multi-step grid double-buffers the page stream — the
+  paper's ping-pong I/O, §6), replacing the gather-then-dense path's
+  [B, maxp, page, KVH, D] HBM materialization.
 * ``paged_attention`` — convenience full attention (partials merged and
   normalized), the single-shard kernel used by ``kernels/ops.py``.
 
@@ -57,8 +63,8 @@ def _partials_kernel(bt_ref, ctx_ref, w_ref,         # scalar prefetch
                      m_s, l_s, acc_s,                # scratch
                      *, page: int, slots_per_split: int, ring_width: int,
                      windowed_slice: bool):
-    b = pl.program_id(0)
-    s = pl.program_id(2)
+    s = pl.program_id(0)
+    b = pl.program_id(1)
     j = pl.program_id(3)
     slot = s * slots_per_split + j
 
@@ -144,20 +150,26 @@ def paged_attention_partials(q, k_pages, v_pages, block_tables, ctx_lens, *,
              jnp.broadcast_to(jnp.asarray(window, jnp.int32).reshape(-1),
                               (B,)))
 
-    grid = (B, KVH, S, K)
+    # split-K axis first and ``parallel``: Mosaic requires parallel axes to
+    # prefix arbitrary ones, and megacore partitioning then spreads the
+    # splits across cores (previously all splits ran sequentially per core
+    # — the ROADMAP n_splits>1 note). The trailing slot axis stays
+    # ``arbitrary``: it revisits the same (s, b, h) scratch accumulator.
+    grid = (S, B, KVH, K)
+    semantics = ("parallel", "arbitrary", "arbitrary", "arbitrary")
 
-    def q_map(b, h, s, j, bt_ref, ctx_ref, w_ref):
+    def q_map(s, b, h, j, bt_ref, ctx_ref, w_ref):
         return (b, h, 0, 0)
 
-    def kv_map(b, h, s, j, bt_ref, ctx_ref, w_ref):
+    def kv_map(s, b, h, j, bt_ref, ctx_ref, w_ref):
         # dead slots clamp to page 0: the fetch is pipelined away when the
         # index repeats, and pl.when skips their compute either way
         return (jnp.maximum(bt_ref[b, s * K + j], 0), 0, h, 0)
 
-    def po_map(b, h, s, j, bt_ref, ctx_ref, w_ref):
+    def po_map(s, b, h, j, bt_ref, ctx_ref, w_ref):
         return (s, b, h, 0, 0)
 
-    def pl_map(b, h, s, j, bt_ref, ctx_ref, w_ref):
+    def pl_map(s, b, h, j, bt_ref, ctx_ref, w_ref):
         return (s, b, h, 0)
 
     kernel = functools.partial(_partials_kernel, page=page,
@@ -165,6 +177,8 @@ def paged_attention_partials(q, k_pages, v_pages, block_tables, ctx_lens, *,
                                windowed_slice=windowed_slice)
     return pl.pallas_call(
         kernel,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=semantics),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,

@@ -9,6 +9,9 @@ throughput, host overhead, preemptions, and page-pool balance. ``--static``
 switches to baseline-PIM static allocation for the comparison;
 ``--prefill-mode`` picks slot / batched / chunked prefill and
 ``--sched-policy`` the admission policy (see repro.serving).
+``--decode-horizon K`` fuses K decode steps (decode + on-device sampling)
+under one jit per tick — the host syncs once per horizon; greedy outputs
+are identical for every K.
 
 ``--shared-frac f`` makes every request start with a common system prompt
 covering fraction ``f`` of its tokens (multi-tenant shared-prefix traffic);
@@ -42,7 +45,8 @@ def build_engine(args) -> DecodeEngine:
                         use_pallas={"auto": None, "on": True,
                                     "off": False}[args.kernel],
                         kernel_splits=args.kernel_splits,
-                        decode_bucket=not args.no_decode_bucket)
+                        decode_bucket=not args.no_decode_bucket,
+                        decode_horizon=args.decode_horizon)
     return DecodeEngine(cfg, ecfg)
 
 
@@ -103,6 +107,11 @@ def main(argv=None):
     ap.add_argument("--no-decode-bucket", action="store_true",
                     help="disable pow2 live-page bucketing of the decode "
                          "block table")
+    from repro.configs.base import ParallelConfig
+    ap.add_argument("--decode-horizon", type=int,
+                    default=ParallelConfig().decode_horizon,
+                    help="fused decode steps per engine tick (one jit, one "
+                         "host sync per horizon); 1 = per-token dispatch")
     args = ap.parse_args(argv)
 
     eng = build_engine(args)
@@ -119,7 +128,9 @@ def main(argv=None):
           f"completed={st.completed}/{args.requests} "
           f"avg_batch={st.avg_batch:.2f} preempted={st.preempted} "
           f"tokens={toks} tok/s={toks / max(dt, 1e-9):.1f} "
-          f"host_us/step={tm['host_us_per_step']:.0f}", flush=True)
+          f"host_us/step={tm['host_us_per_step']:.0f} "
+          f"horizon={args.decode_horizon} "
+          f"syncs/tok={tm['syncs_per_token']:.3f}", flush=True)
     bal = eng.alloc.shard_balance()
     print(f"[serve] page balance per shard: max={bal.max()} min={bal.min()}",
           flush=True)

@@ -531,6 +531,67 @@ def decode_step(cfg, params, state, tokens, bt, ctx, npage, noff, *,
     return rt.constrain(logits, "logits_decode"), state
 
 
+def decode_multi(cfg, params, state, tokens, bt, ctx, rem, allow, key, *,
+                 horizon: int, table_width: int, page_size: int, n_pages: int,
+                 eos_token: int, sample, rt: Runtime = DEFAULT_RT):
+    """Fused multi-step decode: ``horizon`` decode steps, on-device sampling
+    and per-slot EOS/budget masking under ONE ``lax.scan`` — the host syncs
+    once per horizon instead of once per token.
+
+    Device-resident slot state (all [B] unless noted):
+      tokens — incoming token per slot (the previous sample);
+      bt     — [B, W] Va2Pa block table; attention reads the leading
+               ``table_width`` slots (the engine's pow2 live-page bucket),
+               write targets resolve against the full width;
+      ctx    — context INCLUDING the incoming token;
+      rem    — tokens the slot may still emit (budget - generated + 1);
+      allow  — steps the slot may run THIS horizon (page reservation /
+               chunked-prefill clamp; 0 = idle or frozen);
+      key    — PRNG key chain for the sampler (split once per step).
+
+    Per step, for every running slot: write the incoming token's KV
+    (``ops.write_targets`` routes frozen slots out of bounds so their
+    scatter drops), decode, sample ``sample(key, logits)``, then freeze the
+    slot if the sampled token is EOS or the budget is spent. A slot that
+    merely exhausts ``allow`` pauses with its pending token intact and
+    resumes next horizon — per-token trajectories are identical for every
+    horizon, so greedy outputs are horizon-invariant.
+
+    Returns ``(toks [K, B], emit [K, B] bool, finished [B] bool, state,
+    tokens, ctx, rem, key)`` — the last five re-enter the next horizon.
+    """
+    from repro.kernels.ops import write_targets
+    W = bt.shape[1]
+    bt_attn = bt[:, :table_width] if table_width < W else bt
+
+    def body(carry, _):
+        tokens, ctx, rem, allow, alive, state, key = carry
+        run = alive & (allow > 0)
+        npage, noff = write_targets(bt, ctx, run, page_size=page_size,
+                                    n_pages=n_pages,
+                                    ring_width=rt.ring_width)
+        logits, state = decode_step(cfg, params, state, tokens, bt_attn,
+                                    ctx, npage, noff, rt=rt)
+        key, sub = jax.random.split(key)
+        nxt = sample(sub, logits)
+        tokens = jnp.where(run, nxt, tokens)
+        rem = jnp.where(run, rem - 1, rem)
+        fin = run & ((nxt == eos_token) | (rem <= 0))
+        alive = alive & ~fin
+        # finished slots freeze at their final context; paused (allow
+        # spent) and running slots advance so the pending token's write
+        # position is ready for the next step/horizon
+        ctx = jnp.where(run & ~fin, ctx + 1, ctx)
+        allow = jnp.where(run, allow - 1, allow)
+        return (tokens, ctx, rem, allow, alive, state, key), (nxt, run)
+
+    alive0 = allow > 0
+    carry = (tokens, ctx, rem, allow, alive0, state, key)
+    (tokens, ctx, rem, allow, alive, state, key), (toks, emit) = jax.lax.scan(
+        body, carry, None, length=horizon)
+    return toks, emit, alive0 & ~alive, state, tokens, ctx, rem, key
+
+
 # ---------------------------------------------------------------------------
 # prefill: full-sequence forward that also fills the decode caches
 # ---------------------------------------------------------------------------

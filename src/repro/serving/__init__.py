@@ -10,12 +10,13 @@ from repro.serving.policies import (FCFSPolicy, MemoryAwarePolicy,
                                     SchedulingPolicy, SJFPolicy, make_policy)
 from repro.serving.prefill import (BatchedPrefiller, ChunkedPrefiller,
                                    SlotPrefiller, make_prefiller)
-from repro.serving.sampling import Sampler, greedy_sample, make_sampler
+from repro.serving.sampling import (Sampler, greedy_sample, make_sampler,
+                                    make_scan_sampler)
 
 __all__ = [
     "DecodeEngine", "EngineConfig", "EngineTiming",
     "SchedulingPolicy", "FCFSPolicy", "SJFPolicy", "MemoryAwarePolicy",
     "make_policy",
     "SlotPrefiller", "BatchedPrefiller", "ChunkedPrefiller", "make_prefiller",
-    "Sampler", "greedy_sample", "make_sampler",
+    "Sampler", "greedy_sample", "make_sampler", "make_scan_sampler",
 ]

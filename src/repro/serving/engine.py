@@ -3,9 +3,9 @@ decode -> sample.
 
 The host loop mirrors the paper's Fig. 2(c): each iteration the host updates
 the "configuration buffer" (block tables, context lengths, write targets)
-and dispatches one compiled decode step; EOS requests release their pages
-and their slot refills from the queue (Fig. 2(b)). The layers are split so
-each is replaceable:
+and dispatches compiled decode work; EOS requests release their pages and
+their slot refills from the queue (Fig. 2(b)). The layers are split so each
+is replaceable:
 
 * scheduling — ``core.scheduler.ContinuousBatcher`` with a pluggable
   admission policy (``serving.policies``: FCFS / SJF / memory-aware);
@@ -13,18 +13,27 @@ each is replaceable:
   or chunked DCS-style interleave with decode;
 * sampling  — ``serving.sampling``: jitted greedy / temperature / top-k;
 * KV reuse  — ``repro.kvcache.PrefixCache`` (optional): radix prefix
-  sharing across requests plus a host-DRAM offload tier. Admission borrows
-  matched pages, prefill starts at the matched depth, and the engine
-  replays the cache's queued device ops (CoW copies, swap-in scatters)
-  against the pool once per tick before prefill — the host side of the
-  ping-pong.
+  sharing across requests plus a host-DRAM offload tier.
 
-Host bookkeeping (npage/noff/block-table assembly) is vectorized over the
-slot axis against the batcher's incrementally-maintained snapshots — the
-per-slot Python loops were the exact host-side bottleneck the paper's
-host loop avoids. Idle slots route their decode KV write to an
-out-of-bounds page so the scatter drops it (the seed pointed them at page
-0, which silently corrupted whichever live request owned it).
+Two decode paths share the scheduler and prefillers:
+
+* ``step()`` — the per-token tick (seed semantics): rebuild the config
+  buffers, dispatch ONE decode step, block on the logits, sample. Kept as
+  the reference path and for callers driving the engine token-by-token.
+* the fused multi-step path (``run()`` when no legacy sampler callable is
+  installed) — ``EngineConfig.decode_horizon`` decode steps run inside one
+  jit (``models.model.decode_multi``): decode, on-device sampling, KV
+  write-position advance and per-slot EOS/budget masking all stay on
+  device, so the host syncs once per horizon instead of once per token.
+  The per-slot state (block table, context, current token, remaining
+  budget) is device-resident, patched incrementally from the scheduler's
+  dirty-set on admission/growth/preemption — never rebuilt per step — and
+  the tick is pipelined DCS-style: the scan is dispatched asynchronously,
+  the next tick's result-independent host work (cache ping-pong drain,
+  radix peek prefetch) overlaps device compute, and the only host<->device
+  rendezvous is the horizon's token readback. Greedy outputs are
+  token-identical for every horizon (each slot replays the exact per-token
+  trajectory; finished slots freeze and their KV writes drop).
 
 This engine is the single-host functional version (used by tests, examples
 and the lazy-allocation benchmark); launch/serve.py wraps it with the mesh
@@ -34,6 +43,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -46,7 +56,7 @@ from repro.core.scheduler import ContinuousBatcher, Request
 from repro.models import model as MDL
 from repro.serving.policies import make_policy
 from repro.serving.prefill import make_prefiller
-from repro.serving.sampling import make_sampler
+from repro.serving.sampling import make_sampler, make_scan_sampler
 
 
 @dataclass
@@ -68,6 +78,15 @@ class EngineConfig:
     temperature: float = 1.0
     top_k: int = 0
     sample_seed: int = 0
+    # ---- fused multi-step decode ----
+    # decode steps run under ONE jit per tick (host syncs once per horizon).
+    # 1 = per-token dispatch trajectory (still fused-path plumbing). Greedy
+    # outputs are horizon-invariant; the cost of raising it is one extra jit
+    # specialization per (horizon, table-bucket) pair and up to
+    # decode_horizon-1 speculatively reserved pages per slot. Clamped to 1
+    # while chunked prefill is streaming so the DCS interleave granularity
+    # (one chunk between consecutive decode steps) is preserved.
+    decode_horizon: int = 1
     # ---- KV-cache hierarchy (repro.kvcache) ----
     prefix_cache: bool = False        # radix prefix sharing across requests
     prefill_dedup: bool = True        # same-tick prefix dedup at admission
@@ -93,12 +112,60 @@ class EngineTiming:
     host_s: float = 0.0               # schedule + config-buffer assembly
     prefill_s: float = 0.0
     decode_s: float = 0.0             # compiled decode step + sampling
+    device_syncs: int = 0             # host<->device decode rendezvous
+    decode_tokens: int = 0            # tokens emitted by decode dispatches
 
     def as_dict(self) -> dict:
         n = max(1, self.steps)
         return {"steps": self.steps, "host_us_per_step": 1e6 * self.host_s / n,
                 "prefill_s": self.prefill_s, "decode_s": self.decode_s,
-                "host_s": self.host_s}
+                "host_s": self.host_s, "device_syncs": self.device_syncs,
+                "decode_tokens": self.decode_tokens,
+                "syncs_per_token": self.device_syncs
+                / max(1, self.decode_tokens)}
+
+
+class DeviceSlotState:
+    """Device-resident per-slot decode state for the fused multi-step path.
+
+    Holds the block table [n_slots, W], context lengths, current tokens and
+    remaining budgets as jax arrays plus the sampler's PRNG key chain. The
+    fused scan advances them ON DEVICE; the host only patches the rows the
+    scheduler marked dirty (admission / page growth / free) — the
+    incremental "configuration buffer" update of the paper's host loop, at
+    horizon rather than token granularity. Patch row-counts are pow2-padded
+    (repeating the last entry — idempotent) so the donated-buffer scatter
+    jit compiles O(log n_slots) variants.
+    """
+
+    def __init__(self, n_slots: int, width: int, seed: int, donate: bool):
+        self.bt = jnp.full((n_slots, width), -1, jnp.int32)
+        self.ctx = jnp.zeros((n_slots,), jnp.int32)
+        self.tokens = jnp.zeros((n_slots,), jnp.int32)
+        self.rem = jnp.zeros((n_slots,), jnp.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self._patch = jax.jit(
+            DeviceSlotState._patch_fn,
+            donate_argnums=(0, 1, 2, 3) if donate else ())
+
+    @staticmethod
+    def _patch_fn(bt, ctx, tok, rem, idx, bt_rows, ctx_v, tok_v, rem_v):
+        return (bt.at[idx].set(bt_rows), ctx.at[idx].set(ctx_v),
+                tok.at[idx].set(tok_v), rem.at[idx].set(rem_v))
+
+    def patch(self, slots: list[int], bt_rows, ctx_v, tok_v, rem_v) -> None:
+        n, m = len(slots), 1
+        while m < n:
+            m *= 2
+        pad = [slots[-1]] * (m - n)
+        idx = np.asarray(slots + pad, np.int32)
+        rep = [bt_rows[-1:]] * (m - n)
+        self.bt, self.ctx, self.tokens, self.rem = self._patch(
+            self.bt, self.ctx, self.tokens, self.rem, jnp.asarray(idx),
+            jnp.asarray(np.concatenate([bt_rows] + rep) if pad else bt_rows),
+            jnp.asarray(np.concatenate([ctx_v, ctx_v[-1:].repeat(m - n)])),
+            jnp.asarray(np.concatenate([tok_v, tok_v[-1:].repeat(m - n)])),
+            jnp.asarray(np.concatenate([rem_v, rem_v[-1:].repeat(m - n)])))
 
 
 class DecodeEngine:
@@ -135,8 +202,13 @@ class DecodeEngine:
         self.tokens = np.zeros((ecfg.n_slots,), np.int32)
         self.prompts: dict[int, np.ndarray] = {}
         self.outputs: dict[int, list[int]] = {}
+        # TTFT bookkeeping (benchmarks): wall-clock of submit and of the
+        # request's first emitted token
+        self.submit_t: dict[int, float] = {}
+        self.first_tok_t: dict[int, float] = {}
         # ``sample``: legacy per-row host callable (seed API); otherwise the
-        # jitted batch sampler from the config.
+        # jitted batch sampler from the config. A legacy callable cannot run
+        # inside the fused scan, so it pins run() to the per-token path.
         self.sample = sample
         self.sampler = make_sampler(ecfg.sampler, temperature=ecfg.temperature,
                                     top_k=ecfg.top_k, seed=ecfg.sample_seed)
@@ -171,12 +243,27 @@ class DecodeEngine:
         self.timing = EngineTiming()
         self._decode_jit = None
         self._slot_ids = np.arange(ecfg.n_slots)
+        # ---- fused multi-step decode machinery ----
+        # buffer donation only where the runtime honors it (TPU/GPU); on CPU
+        # it is a no-op that warns per compile
+        self._donate = jax.default_backend() not in ("cpu",)
+        self.dev = DeviceSlotState(ecfg.n_slots,
+                                   self.pool_spec.max_pages_per_req,
+                                   ecfg.sample_seed, self._donate)
+        self._fused_jit = None
+        # in-flight horizon: (toks, emit, fin, [(slot, req)]) — device
+        # futures; collected at the next tick's sync point
+        self._inflight: tuple | None = None
+        # finished mask collected by a drain outside the tick loop, consumed
+        # by the next tick's scheduler call
+        self._pending_fin: np.ndarray | None = None
 
     # ------------------------------------------------------------------
     def submit(self, req_id: int, prompt: np.ndarray,
                max_new_tokens: int) -> None:
         self.prompts[req_id] = np.asarray(prompt, np.int32)
         self.outputs[req_id] = []
+        self.submit_t[req_id] = time.perf_counter()
         req = Request(req_id, len(prompt), max_new_tokens)
         if self.prefiller.name == "chunked":
             req.chunked_prefill = True
@@ -209,7 +296,7 @@ class DecodeEngine:
         out = np.asarray(self.outputs[req.req_id], np.int32)
         return np.concatenate([prompt, out])[:req.total_len - 1]
 
-    def _emit_first(self, slot: int, req, logits_row: np.ndarray,
+    def _emit_first(self, slot: int, req, tok: int | None,
                     emit: bool) -> None:
         # the whole prompt's KV is in the pool now: publish the prefix to
         # the radix cache so later same-prefix admissions hit while this
@@ -218,30 +305,50 @@ class DecodeEngine:
         if self.cache is not None:
             self.cache.insert(req.req_id, self._prompt_seq(req)[0])
         if emit:
-            tok = int(self._sample_one(logits_row))
             self.tokens[slot] = tok
-            self.outputs[req.req_id].append(tok)
+            self.outputs[req.req_id].append(int(tok))
+            self.first_tok_t.setdefault(req.req_id, time.perf_counter())
         else:
             self.tokens[slot] = self.outputs[req.req_id][-1]
-
-    def _sample_one(self, logits_row) -> int:
-        if self.sample is not None:
-            return int(self.sample(np.asarray(logits_row)))
-        return int(self.sampler(logits_row))
+        self.batcher.dirty.add(slot)
 
     def _sample_rows(self, logits) -> np.ndarray:
-        """[B, V] -> [B] int32, one device call for the whole batch (legacy
-        per-row callables keep per-row semantics)."""
+        """[B, V] -> [B] int32, one device call for the whole batch. Legacy
+        per-row callables keep per-row semantics, but over a single
+        host-gathered array (one transfer, not one per slot)."""
         if self.sample is not None:
-            return np.asarray([self.sample(row) for row in np.asarray(logits)],
-                              np.int32)
+            rows = np.asarray(logits)
+            return np.fromiter((int(self.sample(r)) for r in rows),
+                               np.int32, len(rows))
         return np.asarray(self.sampler(logits), np.int32)
+
+    def _first_tokens(self, logits, emits) -> np.ndarray:
+        """Sample the first token for a prefill group in ONE batched call
+        (greedy-invariant; only rows that emit are sampled, preserving the
+        resumed-request no-sample semantics)."""
+        toks = np.zeros((len(emits),), np.int32)
+        idx = [i for i, e in enumerate(emits) if e]
+        if idx:
+            toks[idx] = self._sample_rows(np.asarray(logits)[idx])
+        return toks
 
     # ------------------------------------------------------------------
     def step(self, finished_mask=None):
-        """One engine tick: schedule -> prefill -> decode -> sample."""
+        """One per-token engine tick: schedule -> prefill -> decode ->
+        sample, blocking on the step's logits (seed semantics; the fused
+        multi-step path in ``run()`` supersedes this on the hot path).
+
+        Interleaves safely with the fused path: a pending fused finished
+        mask is consumed when the caller passes none, active slots are
+        marked dirty (this tick advances tokens/ctx host-side only, so the
+        device mirror must re-sync before the next horizon), and the
+        returned mask is also stashed for a later ``run()``."""
         E = self.ecfg
         t0 = time.perf_counter()
+        if self._pending_fin is not None:
+            finished_mask = self._pending_fin if finished_mask is None \
+                else (np.asarray(finished_mask, bool) | self._pending_fin)
+            self._pending_fin = None
         admitted, active = self.batcher.step(finished_mask)
         if self.cache is not None:
             # drain last tick's swap-outs + watermark offload (ping-pong),
@@ -268,6 +375,9 @@ class DecodeEngine:
         W = self.pool_spec.max_pages_per_req
         active_mask = np.zeros((E.n_slots,), bool)
         active_mask[active] = True
+        # host-numpy twin of kernels.ops.write_targets (the fused scan's
+        # device-side resolution) — the two must stay bit-identical for
+        # step() and run() to agree (regression: mixed step/run test)
         t = ctx - 1                    # slot of the token being written
         vp = np.clip(t, 0, None) // E.page_size
         if self.rt.ring_width:
@@ -298,10 +408,10 @@ class DecodeEngine:
             jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(npage),
             jnp.asarray(noff))
         logits = np.asarray(logits)
+        self.timing.device_syncs += 1
         if self.sample is not None:    # legacy per-row callable: active only
             nxt = np.zeros((E.n_slots,), np.int32)
-            for s in active:
-                nxt[s] = int(self.sample(logits[s]))
+            nxt[active] = self._sample_rows(logits[active])
         else:
             nxt = self._sample_rows(logits)
         t5 = time.perf_counter()
@@ -316,13 +426,161 @@ class DecodeEngine:
         finished = active_mask & ((nxt == E.eos_token) | (gen >= budget))
         for s in active:
             self.outputs[self.batcher.slots[s].req_id].append(int(nxt[s]))
+        self.timing.decode_tokens += len(active)
+        # the device slot mirror did not see this host-side advance; a later
+        # fused run() must re-upload these rows (and process this mask)
+        self.batcher.dirty.update(active)
+        self._pending_fin = finished
         self.timing.host_s += time.perf_counter() - t5
         return finished
 
+    # ---- fused multi-step path ---------------------------------------
+    def _make_fused(self):
+        E, cfg, rt = self.ecfg, self.cfg, self.rt
+        sample = make_scan_sampler(E.sampler, temperature=E.temperature,
+                                   top_k=E.top_k)
+
+        def fn(params, state, tokens, bt, ctx, rem, allow, key, *,
+               horizon, width):
+            return MDL.decode_multi(
+                cfg, params, state, tokens, bt, ctx, rem, allow, key,
+                horizon=horizon, table_width=width, page_size=E.page_size,
+                n_pages=E.n_pages, eos_token=E.eos_token, sample=sample,
+                rt=rt)
+
+        donate = (1, 2, 4, 5, 7) if self._donate else ()
+        return jax.jit(fn, static_argnames=("horizon", "width"),
+                       donate_argnums=donate)
+
+    def _sync_device_slots(self) -> None:
+        """Mirror the scheduler's dirty rows into the device-resident slot
+        state — the incremental config-buffer update (rows touched by
+        admission, page growth, chunk completion or frees; continuing slots
+        were already advanced ON DEVICE by the previous horizon)."""
+        dirty = self.batcher.take_dirty()
+        if not dirty:
+            return
+        W = self.pool_spec.max_pages_per_req
+        rows = np.ascontiguousarray(self.batcher.block_tables(W)[dirty])
+        ctx_v = self.batcher.context_lens()[dirty]
+        tok_v = self.tokens[dirty]
+        rem_v = np.zeros((len(dirty),), np.int32)
+        for i, s in enumerate(dirty):
+            req = self.batcher.slots[s]
+            if req is not None and req.prefill_done:
+                rem_v[i] = max(0, req.max_new_tokens - req.generated + 1)
+        self.dev.patch(dirty, rows, ctx_v.astype(np.int32),
+                       tok_v.astype(np.int32), rem_v)
+
+    def _collect_horizon(self):
+        """Sync point: block on the in-flight horizon's token readback (the
+        ONE host<->device rendezvous per K decode steps) and fold the
+        emissions into outputs / request bookkeeping."""
+        if self._inflight is None:
+            return None
+        toks, emit, fin, pairs = self._inflight
+        self._inflight = None
+        t0 = time.perf_counter()
+        toks, emit, fin = np.asarray(toks), np.asarray(emit), np.asarray(fin)
+        self.timing.decode_s += time.perf_counter() - t0
+        self.timing.device_syncs += 1
+        finished = np.zeros((self.ecfg.n_slots,), bool)
+        for slot, req in pairs:
+            ts = toks[emit[:, slot], slot]
+            if not len(ts):            # pool-starved to zero steps
+                continue
+            self.outputs[req.req_id].extend(int(t) for t in ts)
+            self.first_tok_t.setdefault(req.req_id, time.perf_counter())
+            # the tick's step() already reserved one token; the rest of the
+            # horizon's emissions land here
+            req.generated += len(ts) - 1
+            self.tokens[slot] = int(ts[-1])
+            finished[slot] = bool(fin[slot])
+            self.timing.decode_tokens += int(len(ts))
+        return finished
+
+    def _step_fused(self) -> None:
+        """One pipelined tick of the fused multi-step path.
+
+        Order is the DCS ping-pong applied to the host loop: with the
+        previous horizon still in flight, do the host work that does NOT
+        depend on its results (cache swap-out drain / watermark offload,
+        radix-peek prefetch for queued candidates), only then sync, and end
+        by dispatching the next horizon WITHOUT blocking on it.
+        """
+        E = self.ecfg
+        t0 = time.perf_counter()
+        # ---- overlap window: result-independent host work --------------
+        if self.cache is not None:
+            self.cache.maintain()
+        if self._inflight is not None and self.batcher.queue:
+            self.batcher.prefetch_peeks(limit=2 * E.n_slots)
+        t1 = time.perf_counter()
+        self.timing.host_s += t1 - t0
+
+        # ---- sync: fold the horizon's tokens into host bookkeeping -----
+        finished = self._collect_horizon()
+        if finished is None:
+            finished, self._pending_fin = self._pending_fin, None
+
+        # ---- schedule + prefill ----------------------------------------
+        t2 = time.perf_counter()
+        admitted, active = self.batcher.step(finished)
+        if self.cache is not None and self.cache.has_pending:
+            # swap-in scatters / CoW copies queued by this tick's
+            # admissions must land before prefill or decode read the pages
+            self.state["pool"] = self.cache.apply_pending(self.state["pool"])
+        t3 = time.perf_counter()
+        self.timing.host_s += t3 - t2
+        if admitted or self.prefiller.busy:
+            active = self.prefiller.run(admitted, active)
+            self.timing.prefill_s += time.perf_counter() - t3
+        self.timing.steps += 1
+        if not active:
+            return
+
+        # ---- horizon reservation + incremental config update -----------
+        t4 = time.perf_counter()
+        K = max(1, E.decode_horizon)
+        cap = self.prefiller.max_horizon
+        if cap is not None:
+            K = min(K, cap)
+        allow = self.batcher.reserve_horizon(active, K)
+        self._sync_device_slots()
+        W = self.pool_spec.max_pages_per_req
+        width = W
+        if E.decode_bucket and W > 16:
+            from repro.serving.prefill import decode_table_bucket
+            width = decode_table_bucket(self.batcher.max_live_pages(), W)
+        if self._fused_jit is None:
+            self._fused_jit = self._make_fused()
+        self.timing.host_s += time.perf_counter() - t4
+
+        # ---- dispatch the fused scan; do NOT block ---------------------
+        t5 = time.perf_counter()
+        toks, emit, fin, self.state, self.dev.tokens, self.dev.ctx, \
+            self.dev.rem, self.dev.key = self._fused_jit(
+                self.params, self.state, self.dev.tokens, self.dev.bt,
+                self.dev.ctx, self.dev.rem, jnp.asarray(allow), self.dev.key,
+                horizon=int(K), width=int(width))
+        self._inflight = (toks, emit, fin,
+                          [(s, self.batcher.slots[s]) for s in active])
+        self.timing.decode_s += time.perf_counter() - t5
+
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
-        finished = None
+        if self.sample is not None:
+            # legacy per-row sampler callables can't run on device: keep the
+            # per-token reference loop
+            finished = None
+            for _ in range(max_steps):
+                if self.batcher.done():
+                    break
+                finished = self.step(finished)
+            return self.outputs
         for _ in range(max_steps):
-            if self.batcher.done():
+            if self._inflight is None and self.batcher.done():
                 break
-            finished = self.step(finished)
+            self._step_fused()
+        if self._inflight is not None:   # max_steps hit mid-horizon
+            self._pending_fin = self._collect_horizon()
         return self.outputs

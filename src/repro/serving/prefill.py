@@ -21,6 +21,13 @@ Three ways to get an admitted prompt into the paged pool:
 ``make_prefiller`` picks the implementation and silently degrades to
 ``slot`` when the engine's model family can't support the requested mode.
 
+Fused-horizon interaction: each prefiller exposes ``max_horizon`` — the cap
+it imposes on the engine's fused decode horizon this tick. Slot/batched
+prefill never cap (``None``); chunked prefill caps to 1 while chunks are
+streaming, so running requests decode exactly one step between consecutive
+chunks and the DCS interleave granularity (and TTFT of the prefilling
+request) is independent of ``decode_horizon``.
+
 Prefix-cache hits (``req.cached_len > 0``) prefill only the *suffix* beyond
 the matched depth in every mode: ``chunked`` simply starts its chunk cursor
 there, while ``slot``/``batched`` route hits through the ``prefill_chunk``
@@ -97,16 +104,18 @@ def prefill_suffix(eng, fn, grp) -> None:
         eng.params, eng.state["pool"], jnp.asarray(toks), jnp.asarray(bts),
         jnp.asarray(starts), jnp.asarray(lens - 1), jnp.asarray(lens))
     eng.state["pool"] = pool
-    logits = np.asarray(logits)
+    emits = [emit for *_, emit in grp]
+    first = eng._first_tokens(logits, emits)     # one batched sample call
     for i, (slot, req, _, emit) in enumerate(grp):
         req.generated = 1
-        eng._emit_first(slot, req, logits[i], emit)
+        eng._emit_first(slot, req, int(first[i]), emit)
 
 
 class SlotPrefiller:
     """Per-request whole-prompt prefill (seed semantics); prefix-cache hits
     take the batch-1 suffix path instead."""
     name = "slot"
+    max_horizon = None                 # never caps the fused decode horizon
 
     def __init__(self, engine):
         self.eng = engine
@@ -156,7 +165,9 @@ class SlotPrefiller:
                     return dst.at[:, slot].set(src[:, 0])
                 eng.state[key] = jax.tree.map(put, eng.state[key],
                                               state1[key])
-        eng._emit_first(slot, req, np.asarray(logits)[0], emit)
+        eng._emit_first(slot, req,
+                        int(eng._first_tokens(np.asarray(logits)[:1],
+                                              [emit])[0]), emit)
 
 
 class BatchedPrefiller:
@@ -164,6 +175,7 @@ class BatchedPrefiller:
     Prefix-cache hits go through suffix-length buckets instead (vector
     ``ctx_start`` — one call per bucket, mixed resume depths)."""
     name = "batched"
+    max_horizon = None
 
     def __init__(self, engine):
         self.eng = engine
@@ -210,10 +222,10 @@ class BatchedPrefiller:
                 eng.params, eng.state["pool"], jnp.asarray(toks),
                 jnp.asarray(bts), jnp.asarray(lens - 1), jnp.asarray(lens))
             eng.state["pool"] = pool
-            logits = np.asarray(logits)
+            first = eng._first_tokens(logits, [fresh[s] for s, _, _ in grp])
             for i, (slot, req, _) in enumerate(grp):
                 req.generated = 1
-                eng._emit_first(slot, req, logits[i], fresh[slot])
+                eng._emit_first(slot, req, int(first[i]), fresh[slot])
         return active
 
 
@@ -232,6 +244,12 @@ class ChunkedPrefiller:
     @property
     def busy(self) -> bool:
         return bool(self._pos)
+
+    @property
+    def max_horizon(self):
+        """One decode step per tick while chunks stream (DCS granularity);
+        uncapped once every prompt is through."""
+        return 1 if self._pos else None
 
     def run(self, admitted, active):
         eng = self.eng
@@ -266,7 +284,10 @@ class ChunkedPrefiller:
                 del self._pos[slot]
                 req.generated = 1
                 if eng.batcher.mark_prefill_done(slot):
-                    eng._emit_first(slot, req, np.asarray(logits)[0], emit)
+                    eng._emit_first(
+                        slot, req,
+                        int(eng._first_tokens(np.asarray(logits)[:1],
+                                              [emit])[0]), emit)
                     completed.append(slot)
                 # else: pool exhausted at the finish line — the batcher
                 # preempted and requeued the bare prompt

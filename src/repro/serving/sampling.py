@@ -3,8 +3,14 @@
 The seed engine sampled on the host with ``np.argmax`` per slot; these run
 the whole batch in one compiled call (greedy argmax, temperature, top-k) so
 sampling rides the same dispatch as the decode step instead of adding a
-per-slot Python loop. Stochastic samplers hold a PRNG-key chain seeded at
-construction: the same seed and call sequence reproduce the same tokens.
+per-slot Python loop. Stochastic samplers hold a PRNG-key chain: the key is
+split INSIDE the jitted call (one dispatch per batch, not a host-side split
+plus a second dispatch), and the same seed and call sequence reproduce the
+same tokens.
+
+``make_scan_sampler`` builds the pure ``(key, logits) -> tokens`` function
+the fused multi-step decode (``models.model.decode_multi``) threads through
+its ``lax.scan`` — sampling then never leaves the device between steps.
 """
 from __future__ import annotations
 
@@ -22,9 +28,9 @@ def greedy_sample(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("top_k",))
-def stochastic_sample(key, logits, temperature=1.0, top_k: int = 0):
-    """Temperature / top-k sampling. top_k=0 samples the full distribution."""
+def _stochastic(key, logits, temperature, top_k: int):
+    """Un-jitted sampling core, shared by the eager wrapper and the fused
+    decode scan. top_k=0 samples the full distribution."""
     logits = logits / jnp.maximum(jnp.asarray(temperature, logits.dtype), 1e-6)
     if top_k:
         vals, idx = jax.lax.top_k(logits, top_k)
@@ -34,12 +40,43 @@ def stochastic_sample(key, logits, temperature=1.0, top_k: int = 0):
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+@partial(jax.jit, static_argnames=("top_k",))
+def stochastic_sample(key, logits, temperature=1.0, top_k: int = 0):
+    """Temperature / top-k sampling. top_k=0 samples the full distribution."""
+    return _stochastic(key, logits, temperature, top_k)
+
+
+@partial(jax.jit, static_argnames=("top_k",))
+def stochastic_sample_step(key, logits, temperature=1.0, top_k: int = 0):
+    """One sampler call with the key chain threaded in-jit: splits ``key``,
+    samples, and returns ``(new_key, tokens)`` in a single dispatch.
+    Bit-identical to splitting on the host first (threefry is deterministic
+    across the jit boundary)."""
+    key, sub = jax.random.split(key)
+    return key, _stochastic(sub, logits, temperature, top_k)
+
+
+def make_scan_sampler(kind: str = "greedy", *, temperature: float = 1.0,
+                      top_k: int = 0):
+    """Pure ``(key, logits [B, V]) -> tokens [B]`` for use INSIDE jit/scan.
+
+    The caller owns the key chain (split once per decode step inside the
+    fused scan); greedy ignores the key so one signature serves all kinds.
+    """
+    assert kind in ("greedy", "temperature", "top_k"), kind
+    if kind == "greedy":
+        return lambda key, logits: jnp.argmax(logits, -1).astype(jnp.int32)
+    tk = int(top_k) if kind == "top_k" else 0
+    temp = float(temperature)
+    return lambda key, logits: _stochastic(key, logits, temp, tk)
+
+
 class Sampler:
     """Stateful batch sampler: ``sampler(logits)`` -> np.int32 tokens.
 
     Accepts [V] or [B, V] logits (np or jnp). Greedy is stateless;
-    temperature/top_k split one key per call, so token streams are
-    deterministic in (seed, call order).
+    temperature/top_k thread one PRNG key through ``stochastic_sample_step``
+    (split in-jit), so token streams are deterministic in (seed, call order).
     """
 
     def __init__(self, kind: str = "greedy", *, temperature: float = 1.0,
@@ -58,9 +95,9 @@ class Sampler:
         if self.kind == "greedy":
             out = greedy_sample(logits)
         else:
-            self._key, sub = jax.random.split(self._key)
-            out = stochastic_sample(sub, logits, self.temperature,
-                                    self.top_k if self.kind == "top_k" else 0)
+            self._key, out = stochastic_sample_step(
+                self._key, logits, self.temperature,
+                self.top_k if self.kind == "top_k" else 0)
         out = np.asarray(out)
         return out[0] if squeeze else out
 

@@ -325,3 +325,30 @@ def test_merge_partials_property(data):
         merged[s] = np.asarray(ref.merge_flash_partials(o, l, m))
     for s in (2, 4, 8):
         np.testing.assert_allclose(merged[s], merged[1], atol=2e-5, rtol=2e-5)
+
+
+def test_partials_split_axis_leads_grid_and_is_split_invariant():
+    """The split-K axis now LEADS the pallas grid (parallel dimension
+    semantics for megacore partitioning): the partials land split-major
+    [S, B, KVH, G, ...] and the MERGED attention is numerically identical
+    for every n_splits — the 'no numeric change' contract of threading
+    dimension_semantics through."""
+    from repro.kernels.paged_attention import paged_attention_partials
+    B, KVH, G, D, page, maxp = 2, 2, 3, 16, 4, 6
+    P_ = B * maxp + 1
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, KVH, G, D))
+    kp = jax.random.normal(jax.random.PRNGKey(1), (P_, page, KVH, D))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (P_, page, KVH, D))
+    bt = jnp.asarray(np.random.default_rng(0).permutation(P_)[:B * maxp]
+                     .reshape(B, maxp).astype(np.int32))
+    ctx = jnp.asarray([maxp * page, 7], jnp.int32)
+    merged = {}
+    for s in (1, 2, 3, 6):
+        o, l, m = paged_attention_partials(q, kp, vp, bt, ctx, n_splits=s,
+                                           interpret=True)
+        assert o.shape == (s, B, KVH, G, D)
+        assert l.shape == m.shape == (s, B, KVH, G)
+        oo, ll, _ = ref.combine_partials(o, l, m)
+        merged[s] = np.asarray(oo / np.maximum(np.asarray(ll), 1e-30)[..., None])
+    for s in (2, 3, 6):
+        np.testing.assert_allclose(merged[s], merged[1], atol=2e-5, rtol=2e-5)
