@@ -28,28 +28,27 @@ _PARAMS = {}
 HORIZONS = (1, 4, 8)
 
 
-def _setup():
+def _setup(arch: str = "llama3.2-1b"):
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config, reduced
     from repro.models import model as MDL
-    if "cfg" not in _PARAMS:
-        cfg = replace(reduced(get_config("llama3.2-1b")), dtype="float32")
-        _PARAMS["cfg"] = cfg
-        _PARAMS["params"] = MDL.init_params(cfg, jax.random.PRNGKey(0),
-                                            jnp.float32)
-    return _PARAMS["cfg"], _PARAMS["params"]
+    if arch not in _PARAMS:
+        cfg = replace(reduced(get_config(arch)), dtype="float32")
+        params = MDL.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        _PARAMS[arch] = (cfg, params)
+    return _PARAMS[arch]
 
 
-def bench(mode: str, *, requests: int = 8, chunk: int = 16, horizon: int = 1,
-          new_tokens: int = 8, max_prompt: int = 64,
-          warmup: int = 2) -> dict:
+def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
+          chunk: int = 16, horizon: int = 1, new_tokens: int = 8,
+          max_prompt: int = 64, warmup: int = 2) -> dict:
     """One engine over the seeded trace. ``warmup`` requests (same length
     distribution, ids >= 1000) run first so the timed phase measures
     steady-state dispatch, not jit compiles; decode throughput is the timed
     phase's decode tokens over its non-prefill wall."""
     from repro.serving import DecodeEngine, EngineConfig
-    cfg, params = _setup()
+    cfg, params = _setup(arch)
     ecfg = EngineConfig(n_slots=4, page_size=8, n_pages=160, max_context=128,
                         eos_token=-1, prefill_mode=mode, prefill_chunk=chunk,
                         decode_horizon=horizon)
@@ -76,7 +75,7 @@ def bench(mode: str, *, requests: int = 8, chunk: int = 16, horizon: int = 1,
     dpre = tm["prefill_s"] - tm0["prefill_s"]
     syncs = tm["device_syncs"] - tm0["device_syncs"]
     ttft = [eng.first_tok_t[r] - eng.submit_t[r] for r in outs]
-    return {"mode": eng.prefiller.name, "horizon": horizon,
+    return {"mode": eng.prefiller.name, "arch": arch, "horizon": horizon,
             "tok_s": toks / max(dt, 1e-9),
             "decode_tok_s": dtoks / max(dt - dpre, 1e-9),
             "ttft_ms": 1e3 * float(np.mean(ttft)) if ttft else 0.0,
@@ -96,13 +95,19 @@ def run(emit, *, smoke: bool = False):
     kw = dict(requests=4, new_tokens=6, warmup=1) if smoke else {}
     hkw = dict(kw, new_tokens=6 if smoke else 64)   # decode-dominated trace
     results = []
-    base = bench("slot", horizon=1, **kw)
-    results.append(base)
+
+    def keep(r, trace):
+        # the trace tag disambiguates rows sharing (arch, mode, horizon)
+        # across sections — check_regression.py keys on it
+        r["trace"] = trace
+        results.append(r)
+        return r
+
+    base = keep(bench("slot", horizon=1, **kw), "prefill")
     emit("serving_prefill_slot", base["host_us"],
          f"tok/s={base['tok_s']:.1f} prefill_s={base['prefill_s']:.2f}")
     for mode in ("batched", "chunked"):
-        r = bench(mode, horizon=1, **kw)
-        results.append(r)
+        r = keep(bench(mode, horizon=1, **kw), "prefill")
         assert r["outputs"] == base["outputs"], \
             f"{mode} prefill changed greedy outputs"
         emit(f"serving_prefill_{mode}", r["host_us"],
@@ -110,8 +115,7 @@ def run(emit, *, smoke: bool = False):
              f"speedup={r['tok_s'] / max(base['tok_s'], 1e-9):.2f}x")
     # fused decode horizons: same trace, batched prefill; outputs must be
     # token-identical and host syncs per token must drop ~K-fold
-    h1 = bench("batched", horizon=1, **hkw)
-    results.append(h1)
+    h1 = keep(bench("batched", horizon=1, **hkw), "decode")
     emit("serving_horizon_1", h1["decode_step_us"],
          f"decode_tok/s={h1['decode_tok_s']:.0f} tok/s={h1['tok_s']:.1f} "
          f"ttft_ms={h1['ttft_ms']:.1f} "
@@ -119,8 +123,7 @@ def run(emit, *, smoke: bool = False):
     for h in HORIZONS:
         if h == 1:
             continue
-        r = bench("batched", horizon=h, **hkw)
-        results.append(r)
+        r = keep(bench("batched", horizon=h, **hkw), "decode")
         assert r["outputs"] == h1["outputs"], \
             f"decode_horizon={h} changed greedy outputs"
         emit(f"serving_horizon_{h}", r["decode_step_us"],
@@ -128,6 +131,24 @@ def run(emit, *, smoke: bool = False):
              f"ttft_ms={r['ttft_ms']:.1f} "
              f"syncs/tok={r['syncs_per_token']:.3f} "
              f"speedup={r['decode_tok_s'] / max(h1['decode_tok_s'], 1e-9):.2f}x")
+    # recurrent hybrid (attention-free xlstm): state-carrying batched and
+    # chunked prefill vs the per-slot recompute path — token-identical, the
+    # win is pure orchestration (one group call per admission tick / chunk
+    # tick instead of one dispatch per slot)
+    rkw = dict(kw, arch="xlstm-350m")
+    rbase = keep(bench("slot", horizon=1, **rkw), "recurrent")
+    emit("serving_recurrent_slot", rbase["host_us"],
+         f"tok/s={rbase['tok_s']:.1f} ttft_ms={rbase['ttft_ms']:.1f} "
+         f"prefill_s={rbase['prefill_s']:.2f}")
+    for mode in ("batched", "chunked"):
+        r = keep(bench(mode, horizon=1, **rkw), "recurrent")
+        assert r["outputs"] == rbase["outputs"], \
+            f"recurrent {mode} prefill changed greedy outputs"
+        emit(f"serving_recurrent_{mode}", r["host_us"],
+             f"tok/s={r['tok_s']:.1f} ttft_ms={r['ttft_ms']:.1f} "
+             f"prefill_s={r['prefill_s']:.2f} "
+             f"speedup={r['tok_s'] / max(rbase['tok_s'], 1e-9):.2f}x "
+             f"ttft_speedup={rbase['ttft_ms'] / max(r['ttft_ms'], 1e-9):.2f}x")
     return results
 
 

@@ -91,6 +91,13 @@ class ContinuousBatcher:
         self.cache_tokens = cache_tokens
         # same-tick prefix dedup (see _dedup_defer); engines may disable
         self.dedup = True
+        # recurrent-state hook: ``rstate_hook(req, slot, finished)`` fires
+        # when a slot's pages are about to be released — preemption
+        # (finished=False: the engine snapshots the recurrent carry + the
+        # written KV pages so re-admission restores instead of recomputing,
+        # mirroring the kvcache swap story) and completion (finished=True:
+        # the engine drops any stored snapshot).
+        self.rstate_hook = None
         # per-tick memo of (tokens, dev_pages, host_pages) per queued
         # candidate: can_admit's capacity estimate and the dedup check
         # share one token materialization + tree walk. ``prefetch_peeks``
@@ -171,7 +178,12 @@ class ContinuousBatcher:
         With a prefix cache the written context is *inserted* before the
         pages are released: the tree keeps them alive (or offloads them to
         the host tier under pressure), so the re-admission's lookup resumes
-        from cache instead of re-prefilling — the swap-in-on-resume path."""
+        from cache instead of re-prefilling — the swap-in-on-resume path.
+        For recurrent/enc-dec families the ``rstate_hook`` plays the same
+        role for the dense carry (and its written KV pages): snapshot
+        before release so resume = restore, not recompute."""
+        if self.rstate_hook is not None:
+            self.rstate_hook(req, s, False)
         if req.generated:
             req.prompt_len = req.total_len - 1
             req.max_new_tokens = max(1, req.max_new_tokens
@@ -267,8 +279,7 @@ class ContinuousBatcher:
             return
         self._peek_memo.clear()
         self._peeks_fresh = True
-        for req in list(self.queue)[:limit if limit is not None
-                                    else len(self.queue)]:
+        for req in list(self.queue)[:limit]:
             self._peek_cached(req)
 
     def cached_pages(self, req: Request) -> int:
@@ -396,6 +407,8 @@ class ContinuousBatcher:
         if finished_mask is not None:
             for s in np.flatnonzero(finished_mask):
                 if self.slots[s] is not None:
+                    if self.rstate_hook is not None:
+                        self.rstate_hook(self.slots[s], s, True)
                     self._release_pages(self.slots[s], finished=True)
                     self.stats.completed += 1
                     self.slots[s] = None

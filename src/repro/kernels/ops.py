@@ -129,14 +129,25 @@ def attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 @partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
-def mamba_mixer(q, k, v, log_a, log_g, *, chunk: int = 128,
-                use_pallas: bool | None = None,
+def mamba_mixer(q, k, v, log_a, log_g, *, chunk: int = 128, state=None,
+                valid_len=None, use_pallas: bool | None = None,
                 interpret: bool | None = None):
-    """Chunked selective scan -> (y [B,S,H,P] f32, state [B,H,N,P] f32)."""
+    """Chunked selective scan -> (y [B,S,H,P] f32, state [B,H,N,P] f32).
+
+    ``state`` [B,H,N,P] resumes a sequence at a chunk boundary (the
+    serving engine's state-carrying chunked prefill); ``valid_len`` [B]
+    masks length-bucketed end-padding out of the returned state."""
     if _resolve(use_pallas):
         return ssm_chunk_scan(q, k, v, log_a, log_g, chunk=chunk,
+                              state=state, valid_len=valid_len,
                               interpret=interpret)
-    y, (C, _, _) = REF.ssm_chunk_scan_ref(q, k, v, log_a, log_g, None, chunk)
+    if valid_len is not None:
+        from repro.models.ssm import mask_log_gates_tail
+        log_a, log_g = mask_log_gates_tail(log_a, log_g, valid_len)
+    h0 = None if state is None else (
+        state, jnp.zeros(state.shape[:-1], state.dtype),
+        jnp.zeros(state.shape[:-2], state.dtype))
+    y, (C, _, _) = REF.ssm_chunk_scan_ref(q, k, v, log_a, log_g, h0, chunk)
     return y, C
 
 

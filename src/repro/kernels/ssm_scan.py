@@ -5,6 +5,13 @@ matmul pair (MXU work); across chunks a [N, P] recurrent state carries in
 VMEM scratch while the grid streams chunk tiles HBM->VMEM (double-buffered —
 the ping-pong pattern again). Grid: (B, H, n_chunks), chunks innermost.
 
+Chunk-boundary continuation: ``state`` seeds the VMEM carry (a prefill chunk
+resumes exactly where the previous chunk's returned state left off) and
+``valid_len`` masks end-padding tails into identity recurrence steps
+(decay 1, gain 0), so pow2 length-bucketed batches return the state at each
+row's true last token — the two hooks behind the serving engine's
+state-carrying chunked/batched prefill for recurrent hybrids.
+
 Matches ``ref.ssm_chunk_scan_ref`` (= models.ssm.chunked_gla with
 normalize=False, itself validated against the exact recurrence).
 """
@@ -22,13 +29,13 @@ from repro.kernels.backend import resolve_interpret
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, la_ref, lg_ref, y_ref, hout_ref, state_s, *,
-            chunk: int, n_chunks: int):
+def _kernel(q_ref, k_ref, v_ref, la_ref, lg_ref, h0_ref, y_ref, hout_ref,
+            state_s, *, chunk: int, n_chunks: int):
     c = pl.program_id(2)
 
     @pl.when(c == 0)
     def _init():
-        state_s[...] = jnp.zeros_like(state_s)
+        state_s[...] = h0_ref[0, 0].astype(jnp.float32)
 
     q = q_ref[0, :, 0, :].astype(jnp.float32)            # [chunk, N]
     k = k_ref[0, :, 0, :].astype(jnp.float32)
@@ -63,18 +70,26 @@ def _kernel(q_ref, k_ref, v_ref, la_ref, lg_ref, y_ref, hout_ref, state_s, *,
         hout_ref[0, 0] = state_s[...]
 
 
-def ssm_chunk_scan(q, k, v, log_a, log_g, *, chunk: int = 128,
-                   interpret: bool | None = None):
+def ssm_chunk_scan(q, k, v, log_a, log_g, *, chunk: int = 128, state=None,
+                   valid_len=None, interpret: bool | None = None):
     """q,k [B,S,H,N]; v [B,S,H,P]; log_a/log_g [B,S,H].
 
-    Returns (y [B,S,H,P] fp32, state [B,H,N,P] fp32) — zero initial state
-    (pass prior state support via the jnp path for prefill continuation).
+    Returns (y [B,S,H,P] fp32, state [B,H,N,P] fp32). ``state`` carries the
+    previous chunk's final state in (zeros = fresh sequence); ``valid_len``
+    [B] makes positions >= valid_len[b] identity steps (log_a=0,
+    log_g=-inf) so length-bucketed tails never touch the returned state
+    (their y rows are garbage — callers must not read them).
     """
     B, S, H, N = q.shape
     P_ = v.shape[-1]
     chunk = min(chunk, S)
     assert S % chunk == 0
     n_chunks = S // chunk
+    if valid_len is not None:
+        from repro.models.ssm import mask_log_gates_tail
+        log_a, log_g = mask_log_gates_tail(log_a, log_g, valid_len)
+    h0 = (jnp.zeros((B, H, N, P_), jnp.float32) if state is None
+          else state.astype(jnp.float32))
     grid = (B, H, n_chunks)
     kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
 
@@ -96,6 +111,7 @@ def ssm_chunk_scan(q, k, v, log_a, log_g, *, chunk: int = 128,
             pl.BlockSpec((1, chunk, 1, P_), seq_map),
             pl.BlockSpec((1, chunk, 1), g_map),
             pl.BlockSpec((1, chunk, 1), g_map),
+            pl.BlockSpec((1, 1, N, P_), h_map),
         ],
         out_specs=[
             pl.BlockSpec((1, chunk, 1, P_), seq_map),
@@ -107,4 +123,4 @@ def ssm_chunk_scan(q, k, v, log_a, log_g, *, chunk: int = 128,
         ],
         scratch_shapes=[pltpu.VMEM((N, P_), jnp.float32)],
         interpret=resolve_interpret(interpret),
-    )(q, k, v, log_a, log_g)
+    )(q, k, v, log_a, log_g, h0)

@@ -7,8 +7,11 @@ cache over a LongBench-like request trace.
 Reports achieved average batch (the paper's Fig. 4(b) metric), token
 throughput, host overhead, preemptions, and page-pool balance. ``--static``
 switches to baseline-PIM static allocation for the comparison;
-``--prefill-mode`` picks slot / batched / chunked prefill and
-``--sched-policy`` the admission policy (see repro.serving).
+``--prefill-mode`` picks slot / batched / chunked prefill (every arch
+family, including recurrent hybrids like xlstm/zamba2 via state-carrying
+chunk prefill) and ``--sched-policy`` the admission policy (see
+repro.serving). Recurrent/enc-dec archs snapshot their carry on preemption
+and restore on resume (``--no-state-resume`` reverts to full recompute).
 ``--decode-horizon K`` fuses K decode steps (decode + on-device sampling)
 under one jit per tick — the host syncs once per horizon; greedy outputs
 are identical for every K.
@@ -46,7 +49,8 @@ def build_engine(args) -> DecodeEngine:
                                     "off": False}[args.kernel],
                         kernel_splits=args.kernel_splits,
                         decode_bucket=not args.no_decode_bucket,
-                        decode_horizon=args.decode_horizon)
+                        decode_horizon=args.decode_horizon,
+                        state_resume=not args.no_state_resume)
     return DecodeEngine(cfg, ecfg)
 
 
@@ -107,6 +111,10 @@ def main(argv=None):
     ap.add_argument("--no-decode-bucket", action="store_true",
                     help="disable pow2 live-page bucketing of the decode "
                          "block table")
+    ap.add_argument("--no-state-resume", action="store_true",
+                    help="recurrent/enc-dec archs: disable preemption "
+                         "snapshots of the recurrent carry (+written KV), "
+                         "falling back to full re-prefill on resume")
     from repro.configs.base import ParallelConfig
     ap.add_argument("--decode-horizon", type=int,
                     default=ParallelConfig().decode_horizon,
@@ -134,6 +142,9 @@ def main(argv=None):
     bal = eng.alloc.shard_balance()
     print(f"[serve] page balance per shard: max={bal.max()} min={bal.min()}",
           flush=True)
+    if eng.has_rstate:
+        print(f"[serve] rstate: snapshots={eng.rstate_snapshots} "
+              f"restores={eng.rstate_restores}", flush=True)
     if eng.cache is not None:
         cs = eng.cache.stats_dict()
         print(f"[serve] kvcache: hits={cs['hits']}/{cs['lookups']} "

@@ -398,14 +398,25 @@ def _attn_block_decode(p, cfg, x, cs, window, pool_k, pool_v, bt, ctx,
     return rt.constrain(x, "act_decode"), pool_k, pool_v
 
 
-def init_decode_state(cfg, pool_spec, batch: int, *, dtype=None):
-    """Decode-side caches: paged pools for attention layers + recurrent
-    states for ssm layers (+ cross-attn KV for enc-dec)."""
-    from repro.core.paged_kv import init_pool
+# state entries with a per-slot batch row at axis 1 ([L, B, ...] leaves):
+# the recurrent carry (SSM/xLSTM hidden + conv states) and the enc-dec
+# cross-attention KV. Everything the serving engine must snapshot/restore
+# per slot for state-carrying chunked/batched prefill and
+# preemption-resume; the paged ``pool`` is deliberately NOT here (pages are
+# per-request via the block table, owned by the allocator).
+RSTATE_KEYS = ("mamba", "mlstm", "slstm", "cross_k", "cross_v")
+
+
+def rstate_entries(state) -> dict[str, Any]:
+    """The per-slot recurrent/cross entries present in a decode state."""
+    return {k: state[k] for k in RSTATE_KEYS if k in state}
+
+
+def init_rstate(cfg, batch: int, *, dtype=None) -> dict[str, Any]:
+    """Fresh (zero) recurrent/cross state for ``batch`` slots — every leaf
+    [L, batch, ...]."""
     state: dict[str, Any] = {}
     kinds = cfg.block_kinds()
-    if any(k in ("attn", "local") for k in kinds) or cfg.family == "encdec":
-        state["pool"] = init_pool(pool_spec)
     if "mamba" in kinds:
         n_m = sum(1 for k in kinds if k == "mamba")
         state["mamba"] = jax.vmap(
@@ -424,6 +435,37 @@ def init_decode_state(cfg, pool_spec, batch: int, *, dtype=None):
     return state
 
 
+def gather_rstate(state, idx) -> dict[str, Any]:
+    """Rows ``idx`` of every recurrent/cross entry ([L, B, ...] ->
+    [L, len(idx), ...]) — the engine's per-slot group gather for batched
+    prefill and preemption snapshots."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda a: a[:, idx], rstate_entries(state))
+
+
+def scatter_rstate(state, idx, rows) -> dict[str, Any]:
+    """Return ``state`` with recurrent/cross rows ``idx`` replaced by
+    ``rows`` (a ``gather_rstate``-shaped tree). Non-rstate entries pass
+    through untouched."""
+    idx = jnp.asarray(idx, jnp.int32)
+    out = dict(state)
+    out.update(jax.tree.map(lambda a, r: a.at[:, idx].set(r),
+                            rstate_entries(state), rows))
+    return out
+
+
+def init_decode_state(cfg, pool_spec, batch: int, *, dtype=None):
+    """Decode-side caches: paged pools for attention layers + recurrent
+    states for ssm layers (+ cross-attn KV for enc-dec)."""
+    from repro.core.paged_kv import init_pool
+    state: dict[str, Any] = {}
+    kinds = cfg.block_kinds()
+    if any(k in ("attn", "local") for k in kinds) or cfg.family == "encdec":
+        state["pool"] = init_pool(pool_spec)
+    state.update(init_rstate(cfg, batch, dtype=dtype))
+    return state
+
+
 def make_cross_kv(cfg, params, enc_out):
     """Precompute whisper cross-attention KV [L, B, enc, KVH, dh]."""
     def one(lp):
@@ -435,12 +477,28 @@ def make_cross_kv(cfg, params, enc_out):
     return jax.vmap(one)(params["dec"])
 
 
+def _keep_rows(new, old, run):
+    """Advance recurrent state only for running slots: rows with
+    ``run=False`` keep their previous carry. Leaves are [L, B, ...]."""
+    if run is None:
+        return new
+    return jax.tree.map(
+        lambda n, o: jnp.where(run.reshape((1, -1) + (1,) * (n.ndim - 2)),
+                               n, o), new, old)
+
+
 def decode_step(cfg, params, state, tokens, bt, ctx, npage, noff, *,
-                positions=None, rt: Runtime = DEFAULT_RT):
+                positions=None, run=None, rt: Runtime = DEFAULT_RT):
     """One decode step for the whole batch.
 
     tokens [B]; bt [B, maxp]; ctx [B] (INCLUDING the new token);
     npage/noff [B] write target for the new token's KV.
+    ``run`` [B] bool: slots decoding this step. Attention KV writes already
+    drop for non-running slots (out-of-bounds ``npage``), but recurrent /
+    SSM state is a dense per-slot carry — without the mask an idle, paused
+    or mid-chunk-prefill slot would absorb its stale pending token every
+    step and corrupt the carry. ``None`` keeps the legacy advance-all
+    behavior (callers whose batch is wholly active).
     Returns (fp32 logits [B, V], new_state).
     """
     B = tokens.shape[0]
@@ -496,7 +554,8 @@ def decode_step(cfg, params, state, tokens, bt, ctx, npage, noff, *,
         (x), (new_m, new_s) = jax.lax.scan(
             body, x, (params["mlstm"], params["slstm"],
                       state["mlstm"], state["slstm"]))
-        state["mlstm"], state["slstm"] = new_m, new_s
+        state["mlstm"] = _keep_rows(new_m, state["mlstm"], run)
+        state["slstm"] = _keep_rows(new_s, state["slstm"], run)
     else:                                               # zamba hybrid
         n_cyc = cfg.n_layers // len(cfg.pattern)
         per_cyc = sum(1 for k in cfg.pattern if k == "mamba")
@@ -522,8 +581,9 @@ def decode_step(cfg, params, state, tokens, bt, ctx, npage, noff, *,
             pk = pk.at[c].set(pkl)
             pv = pv.at[c].set(pvl)
         state["pool"] = {"k": pk, "v": pv}
-        state["mamba"] = jax.tree.map(
-            lambda *xs: jnp.concatenate(xs, 0), *new_mamba)
+        state["mamba"] = _keep_rows(
+            jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba),
+            state["mamba"], run)
 
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     w = params["embed"] if cfg.tie_embeddings else params["head"]
@@ -563,6 +623,10 @@ def decode_multi(cfg, params, state, tokens, bt, ctx, rem, allow, key, *,
     from repro.kernels.ops import write_targets
     W = bt.shape[1]
     bt_attn = bt[:, :table_width] if table_width < W else bt
+    # samplers that opt in via the ``takes_run`` attribute (host-callback
+    # adapters invoking a legacy per-row callable for active rows only)
+    # get the run mask as a third argument
+    sample_takes_run = getattr(sample, "takes_run", False)
 
     def body(carry, _):
         tokens, ctx, rem, allow, alive, state, key = carry
@@ -571,9 +635,10 @@ def decode_multi(cfg, params, state, tokens, bt, ctx, rem, allow, key, *,
                                     n_pages=n_pages,
                                     ring_width=rt.ring_width)
         logits, state = decode_step(cfg, params, state, tokens, bt_attn,
-                                    ctx, npage, noff, rt=rt)
+                                    ctx, npage, noff, run=run, rt=rt)
         key, sub = jax.random.split(key)
-        nxt = sample(sub, logits)
+        nxt = sample(sub, logits, run) if sample_takes_run \
+            else sample(sub, logits)
         tokens = jnp.where(run, nxt, tokens)
         rem = jnp.where(run, rem - 1, rem)
         fin = run & ((nxt == eos_token) | (rem <= 0))
@@ -595,6 +660,51 @@ def decode_multi(cfg, params, state, tokens, bt, ctx, rem, allow, key, *,
 # ---------------------------------------------------------------------------
 # prefill: full-sequence forward that also fills the decode caches
 # ---------------------------------------------------------------------------
+
+def _prefill_block_tail(lp, cfg, h, cross, rt: Runtime):
+    """Cross-attention + FFN epilogue of a prefill attention block, shared
+    by the whole-sequence (``prefill``) and chunked (``prefill_chunk``)
+    paths so the two can never diverge. ``cross``: (k, v) rows [B, enc,
+    KVH, D] or None."""
+    B, S = h.shape[:2]
+    if cross is not None:
+        hx = L.rms_norm(h, lp["lnx"], cfg.norm_eps)
+        qx = L.dense(hx, lp["xattn"]["wq"]).reshape(
+            B, S, cfg.n_heads, cfg.d_head)
+        ax = L.flash_attention(qx, cross[0], cross[1], causal=False)
+        h = h + L.dense(ax.reshape(B, S, cfg.q_dim), lp["xattn"]["wo"])
+    if "ln2" in lp:
+        h2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        y = (rt.moe_apply(lp["moe"], cfg, h2)[0] if "moe" in lp
+             else L.mlp(lp["mlp"], h2, cfg.act))
+        h = h + y
+    return rt.constrain(h, "act")
+
+
+def _xlstm_prefill_body(cfg, rt: Runtime, mask):
+    """Scan body over (mLSTM, sLSTM) cycles with explicit state carry,
+    shared by ``prefill`` and ``prefill_chunk``."""
+    def body(carry, xs):
+        h = carry
+        lp_m, lp_s, st_m, st_s = xs
+        y, st_m = SSM.mlstm_forward(lp_m, cfg, h, state=st_m,
+                                    chunk=rt.gla_chunk, mask=mask)
+        h = h + y
+        y, st_s = SSM.slstm_forward(lp_s, cfg, h, state=st_s, mask=mask)
+        return h + y, (st_m, st_s)
+    return body
+
+
+def _mamba_prefill_body(cfg, rt: Runtime, mask):
+    """Scan body over a Mamba2 sub-stack with explicit state carry, shared
+    by ``prefill`` and ``prefill_chunk``."""
+    def mbody(h, xs):
+        lp, st = xs
+        y, st = SSM.mamba_forward(lp, cfg, h, state=st,
+                                  chunk=rt.gla_chunk, mask=mask)
+        return h + y, st
+    return mbody
+
 
 def prefill(cfg, params, state, tokens, bt, *, positions=None,
             extra_embeds=None, frames=None, last_idx=None, valid_len=None,
@@ -622,6 +732,13 @@ def prefill(cfg, params, state, tokens, bt, *, positions=None,
     kinds = cfg.block_kinds()
     state = dict(state)
     aux_unused = jnp.float32(0)
+    # recurrent carries are dense per-row state: length-bucketed batches
+    # must stop each row's state at its true last token (attention needs no
+    # mask — pad writes drop and causality isolates real positions)
+    mask = None
+    if valid_len is not None:
+        mask = (jnp.arange(S)[None, :]
+                < jnp.asarray(valid_len, jnp.int32)[:, None])
 
     enc_out = None
     if cfg.family == "encdec":
@@ -654,18 +771,7 @@ def prefill(cfg, params, state, tokens, bt, *, positions=None,
         vf = rt.constrain(v, "kv_full")
         a = L.flash_attention(q, kf, vf, causal=True, window=w)
         h = h + L.dense(a.reshape(B, S, cfg.q_dim), lp["attn"]["wo"])
-        if cross is not None:
-            hx = L.rms_norm(h, lp["lnx"], cfg.norm_eps)
-            qx = L.dense(hx, lp["xattn"]["wq"]).reshape(
-                B, S, cfg.n_heads, cfg.d_head)
-            ax = L.flash_attention(qx, cross[0], cross[1], causal=False)
-            h = h + L.dense(ax.reshape(B, S, cfg.q_dim), lp["xattn"]["wo"])
-        if "ln2" in lp:
-            h2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
-            y = (rt.moe_apply(lp["moe"], cfg, h2)[0] if "moe" in lp
-                 else L.mlp(lp["mlp"], h2, cfg.act))
-            h = h + y
-        return rt.constrain(h, "act"), pkl, pvl
+        return _prefill_block_tail(lp, cfg, h, cross, rt), pkl, pvl
 
     if cfg.family == "encdec" or all(k in ("attn", "local") for k in kinds):
         windows = jnp.asarray(_window_array(cfg))
@@ -695,15 +801,7 @@ def prefill(cfg, params, state, tokens, bt, *, positions=None,
         (x, pk, pv), _ = jax.lax.scan(body, (x, pool["k"], pool["v"]), xs)
         state["pool"] = {"k": pk, "v": pv}
     elif "mlstm" in params:
-        def body(carry, xs):
-            h = carry
-            lp_m, lp_s, st_m, st_s = xs
-            y, st_m = SSM.mlstm_forward(lp_m, cfg, h, state=st_m,
-                                        chunk=rt.gla_chunk)
-            h = h + y
-            y, st_s = SSM.slstm_forward(lp_s, cfg, h, state=st_s)
-            return h + y, (st_m, st_s)
-
+        body = _xlstm_prefill_body(cfg, rt, mask)
         body = jax.checkpoint(body) if rt.remat else body
         x, (new_m, new_s) = jax.lax.scan(
             body, x, (params["mlstm"], params["slstm"],
@@ -715,12 +813,7 @@ def prefill(cfg, params, state, tokens, bt, *, positions=None,
         pool = state["pool"]
         pk, pv = pool["k"], pool["v"]
         new_mamba = []
-
-        def mbody(h, xs):
-            lp, st = xs
-            y, st = SSM.mamba_forward(lp, cfg, h, state=st, chunk=rt.gla_chunk)
-            return h + y, st
-
+        mbody = _mamba_prefill_body(cfg, rt, mask)
         mbody = jax.checkpoint(mbody) if rt.remat else mbody
         for c in range(n_cyc):
             sl = lambda a: a[c * per_cyc:(c + 1) * per_cyc]
@@ -751,35 +844,44 @@ def prefill_chunk(cfg, params, state, tokens, bt, ctx_start, *,
     """Chunked prefill continuation — the DCS-style interleave primitive.
 
     Processes tokens [B, C] at global positions ctx_start..ctx_start+C-1
-    against context already written to the paged pool by earlier chunks:
-    each layer writes the chunk's K/V via ``write_prefill(ctx_start=...)``,
-    gathers its pages, and attends with ``q_offset=ctx_start`` so the causal
-    mask spans prior chunks. ``ctx_start``/``last_idx``/``valid_len`` may be
-    traced, so one jit serves every chunk position; ``ctx_start`` may also
-    be a [B] vector — each request resumes at its own depth (prefix-cache
-    suffix prefill over a batch of different matched lengths).
+    against context already held by earlier chunks. Attention layers write
+    the chunk's K/V via ``write_prefill(ctx_start=...)``, gather their
+    pages, and attend with ``q_offset=ctx_start`` so the causal mask spans
+    prior chunks; recurrent layers (Mamba2 / mLSTM / sLSTM) resume from the
+    explicit per-row carry in ``state`` (the previous chunk's returned
+    state — chunk-boundary handoff, exactly the ``chunked_gla`` state
+    mechanism) and enc-dec decoder chunks attend over the carried
+    ``cross_k``/``cross_v`` rows (computed once from the encoder at
+    admission). ``ctx_start``/``last_idx``/``valid_len`` may be traced, so
+    one jit serves every chunk position; ``ctx_start`` may also be a [B]
+    vector — each request resumes at its own depth (prefix-cache suffix
+    prefill / snapshot restore over a batch of different resume depths).
+    ``valid_len`` masks end-padding out of pool writes AND recurrent
+    carries, so pow2 length-bucketed groups stay exact.
 
-    Uniform-attention stacks only (``params["layers"]``, non-ring pools) —
-    recurrent/enc-dec families keep whole-prompt prefill. Returns (fp32
-    logits at last_idx (default C-1) [B, V], new_state).
+    ``state`` carries whatever the family needs (``pool`` and/or the
+    ``RSTATE_KEYS`` rows, batch axis = B). Returns (fp32 logits at last_idx
+    (default C-1) [B, V], new_state).
     """
     from repro.core.paged_kv import gather_kv, write_prefill
-    assert "layers" in params and cfg.family != "encdec", \
-        "chunked prefill supports uniform attention stacks only"
     B, C = tokens.shape
     x = L.embed(params["embed"], tokens)
-    x = rt.constrain(x, "act")
     start = jnp.asarray(ctx_start, jnp.int32)
-    positions = default_positions(
-        cfg, B, C, offset=start if start.ndim == 0 else start[:, None])
+    offset = start if start.ndim == 0 else start[:, None]
+    if cfg.rope_kind == "none" and cfg.family == "encdec":
+        pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None] + offset,
+                               (B, C))
+        x = x + L.sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+    x = rt.constrain(x, "act")
+    positions = default_positions(cfg, B, C, offset=offset)
     cs = _cos_sin(cfg, positions)
-    windows = jnp.asarray(_window_array(cfg))
-    pool = state["pool"]
+    state = dict(state)
+    mask = None
+    if valid_len is not None:
+        mask = (jnp.arange(C)[None, :]
+                < jnp.asarray(valid_len, jnp.int32)[:, None])
 
-    # pool layers stream through the scan as xs/ys (same HBM-traffic argument
-    # as decode_step)
-    def body(h, xs):
-        lp, w, pkl, pvl = xs
+    def chunk_attn_block(lp, h, w, pkl, pvl, cross=None):
         hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
         q, k, v = L.qkv_project(lp["attn"], cfg, hn)
         if cs is not None:
@@ -791,17 +893,62 @@ def prefill_chunk(cfg, params, state, tokens, bt, ctx_start, *,
         a = L.flash_attention(q, kf, vf, causal=True, window=w,
                               q_offset=start)
         h = h + L.dense(a.reshape(B, C, cfg.q_dim), lp["attn"]["wo"])
-        if "ln2" in lp:
-            h2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
-            y = (rt.moe_apply(lp["moe"], cfg, h2)[0] if "moe" in lp
-                 else L.mlp(lp["mlp"], h2, cfg.act))
-            h = h + y
-        return rt.constrain(h, "act"), (pkl, pvl)
+        return _prefill_block_tail(lp, cfg, h, cross, rt), pkl, pvl
 
-    x, (pk, pv) = jax.lax.scan(
-        body, x, (params["layers"], windows, pool["k"], pool["v"]))
-    state = dict(state)
-    state["pool"] = {"k": pk, "v": pv}
+    if "layers" in params:
+        windows = jnp.asarray(_window_array(cfg))
+        pool = state["pool"]
+
+        # pool layers stream through the scan as xs/ys (same HBM-traffic
+        # argument as decode_step)
+        def body(h, xs):
+            lp, w, pkl, pvl = xs
+            h, pkl, pvl = chunk_attn_block(lp, h, w, pkl, pvl)
+            return h, (pkl, pvl)
+
+        x, (pk, pv) = jax.lax.scan(
+            body, x, (params["layers"], windows, pool["k"], pool["v"]))
+        state["pool"] = {"k": pk, "v": pv}
+    elif cfg.family == "encdec":
+        pool = state["pool"]
+
+        def body(h, xs):
+            lp, pkl, pvl, ck, cv = xs
+            h, pkl, pvl = chunk_attn_block(lp, h, 0, pkl, pvl,
+                                           cross=(ck, cv))
+            return h, (pkl, pvl)
+
+        x, (pk, pv) = jax.lax.scan(
+            body, x, (params["dec"], pool["k"], pool["v"],
+                      state["cross_k"], state["cross_v"]))
+        state["pool"] = {"k": pk, "v": pv}
+    elif "mlstm" in params:                             # xlstm
+        x, (new_m, new_s) = jax.lax.scan(
+            _xlstm_prefill_body(cfg, rt, mask), x,
+            (params["mlstm"], params["slstm"],
+             state["mlstm"], state["slstm"]))
+        state["mlstm"], state["slstm"] = new_m, new_s
+    else:                                               # zamba hybrid
+        n_cyc = cfg.n_layers // len(cfg.pattern)
+        per_cyc = sum(1 for k in cfg.pattern if k == "mamba")
+        pool = state["pool"]
+        pk, pv = pool["k"], pool["v"]
+        new_mamba = []
+        mbody = _mamba_prefill_body(cfg, rt, mask)
+        for c in range(n_cyc):
+            sl = lambda a: a[c * per_cyc:(c + 1) * per_cyc]
+            x, st_out = jax.lax.scan(
+                mbody, x, (jax.tree.map(sl, params["mamba"]),
+                           jax.tree.map(sl, state["mamba"])))
+            new_mamba.append(st_out)
+            x, pkl, pvl = chunk_attn_block(
+                params["attn_shared"], x, 0, pk[c], pv[c])
+            pk = pk.at[c].set(pkl)
+            pv = pv.at[c].set(pvl)
+        state["pool"] = {"k": pk, "v": pv}
+        state["mamba"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, 0), *new_mamba)
+
     if last_idx is None:
         x = x[:, -1]
     else:

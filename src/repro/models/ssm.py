@@ -195,25 +195,70 @@ def _mamba_ssm_inputs(p, cfg, xbc, dt_raw):
     return xh, Bm, Cm, dt, log_a
 
 
-def mamba_forward(p, cfg, x, state=None, *, chunk: int = 128):
-    """x [B,S,D] -> (y [B,S,D], state). state=(conv_tail [B,K-1,C], ssm (C,n,m))."""
+def mask_log_gates(log_a, log_g, mask):
+    """Turn pad positions into identity recurrence steps: decay 1
+    (``log_a=0``) and input gain 0 (``log_g=-inf``), so the GLA state passes
+    through them unchanged. ``mask`` [B,S] bool (True = real token); the
+    per-position outputs at pads are garbage and must not be read."""
+    m = mask[..., None]
+    return jnp.where(m, log_a, 0.0), jnp.where(m, log_g, NEG_INF)
+
+
+def mask_log_gates_tail(log_a, log_g, valid_len):
+    """``valid_len`` [B] form of :func:`mask_log_gates` for [B,S,H] gates:
+    positions >= valid_len[b] become identity steps. The single home of
+    the identity-step encoding for the kernel wrappers
+    (``kernels/ssm_scan.py``, ``kernels.ops.mamba_mixer``)."""
+    live = (jnp.arange(log_a.shape[1])[None, :, None]
+            < jnp.asarray(valid_len, jnp.int32)[:, None, None])
+    return (jnp.where(live, log_a, 0.0), jnp.where(live, log_g, NEG_INF))
+
+
+def _masked_tail(full, mask, width: int):
+    """Last ``width`` *valid* entries of ``full`` = [carried tail | seq],
+    where row b has ``mask[b].sum()`` valid seq positions (end-padding) and
+    the carried-tail entries are always valid: valid length of ``full`` is
+    ``carried + vlen[b]``, so the window starts at ``carried + vlen - width``."""
+    carried = full.shape[1] - mask.shape[1]
+    vlen = mask.sum(axis=1).astype(jnp.int32)                   # [B]
+    idx = vlen[:, None] + (carried - width) + jnp.arange(width)[None, :]
+    idx = jnp.clip(idx, 0, full.shape[1] - 1)
+    return jnp.take_along_axis(full, idx[..., None], axis=1)
+
+
+def mamba_forward(p, cfg, x, state=None, *, chunk: int = 128, mask=None):
+    """x [B,S,D] -> (y [B,S,D], state). state=(conv_tail [B,K-1,C], ssm (C,n,m)).
+
+    ``mask`` [B,S] bool marks real tokens (end-padded rows in a
+    length-bucketed batch): pad positions neither advance the SSM state nor
+    enter the carried conv tail, so the returned state is exactly the state
+    after each row's last valid token.
+    """
     Bsz, S, D = x.shape
     nh, N = cfg.ssm_n_heads, cfg.ssm_state
     xin = rms_norm(x, p["ln"], cfg.norm_eps)
     z, xbc, dt_raw = _mamba_proj(p, cfg, xin)
+    carried = cfg.ssm_conv - 1
     if state is not None:
         conv_tail = state["conv"]
         xbc_full = jnp.concatenate([conv_tail.astype(xbc.dtype), xbc], axis=1)
         xbc_act = _causal_conv(xbc_full, p["conv_w"], p["conv_b"])[:, conv_tail.shape[1]:]
     else:
+        conv_tail = jnp.zeros((Bsz, carried, xbc.shape[-1]), xbc.dtype)
+        xbc_full = jnp.concatenate([conv_tail, xbc], axis=1)
         xbc_act = _causal_conv(xbc, p["conv_w"], p["conv_b"])
-    new_conv_tail = (jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
-                     if state is not None else xbc)[:, -(cfg.ssm_conv - 1):]
+    if mask is None:
+        new_conv_tail = xbc_full[:, -carried:]
+    else:
+        new_conv_tail = _masked_tail(xbc_full, mask, carried)
     xh, Bm, Cm, dt, log_a = _mamba_ssm_inputs(p, cfg, xbc_act, dt_raw)
     q = jnp.broadcast_to(Cm[:, :, None, :], (Bsz, S, nh, N))
     k = jnp.broadcast_to(Bm[:, :, None, :], (Bsz, S, nh, N))
     ssm_state = state["ssm"] if state is not None else None
-    y, ssm_state = chunked_gla(q, k, xh, log_a, jnp.log(dt + 1e-20),
+    log_g = jnp.log(dt + 1e-20)
+    if mask is not None:
+        log_a, log_g = mask_log_gates(log_a, log_g, mask)
+    y, ssm_state = chunked_gla(q, k, xh, log_a, log_g,
                                chunk=chunk, normalize=False, state=ssm_state)
     y = y + xh.astype(F32) * p["D"][None, None, :, None]
     y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype)
@@ -276,11 +321,15 @@ def _mlstm_qkvg(p, cfg, xin):
     return q, k, v, log_a, log_g, g
 
 
-def mlstm_forward(p, cfg, x, state=None, *, chunk: int = 128):
+def mlstm_forward(p, cfg, x, state=None, *, chunk: int = 128, mask=None):
+    """``mask`` [B,S] bool: pad positions are identity steps (state carry
+    unchanged); their outputs are garbage and must not be read."""
     B, S, D = x.shape
     H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
     xin = rms_norm(x, p["ln"], cfg.norm_eps)
     q, k, v, log_a, log_g, g = _mlstm_qkvg(p, cfg, xin)
+    if mask is not None:
+        log_a, log_g = mask_log_gates(log_a, log_g, mask)
     y, new_state = chunked_gla(q, k, v, log_a, log_g, chunk=chunk,
                                normalize=True, state=state)
     y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
@@ -343,15 +392,27 @@ def _slstm_cell(p, cfg, x_pre, state):
     return (c_new, n_new, m_new, h_new), h_new
 
 
-def slstm_forward(p, cfg, x, state=None):
+def slstm_forward(p, cfg, x, state=None, *, mask=None):
+    """``mask`` [B,S] bool: pad positions keep the previous carry (their
+    emitted h is garbage and must not be read)."""
     B, S, D = x.shape
     xin = rms_norm(x, p["ln"], cfg.norm_eps)
     x_pre = dense(xin, p["w"])                               # [B,S,4D]
     if state is None:
         state = slstm_init_state(cfg, B)
-    def step(carry, xp):
-        return _slstm_cell(p, cfg, xp, carry)
-    state, hs = jax.lax.scan(step, state, x_pre.transpose(1, 0, 2))
+    if mask is None:
+        def step(carry, xp):
+            return _slstm_cell(p, cfg, xp, carry)
+        state, hs = jax.lax.scan(step, state, x_pre.transpose(1, 0, 2))
+    else:
+        def step(carry, xs):
+            xp, mt = xs                                      # mt [B]
+            new, h = _slstm_cell(p, cfg, xp, carry)
+            new = tuple(jnp.where(mt[:, None], n, o)
+                        for n, o in zip(new, carry))
+            return new, h
+        state, hs = jax.lax.scan(
+            step, state, (x_pre.transpose(1, 0, 2), mask.T))
     h = hs.transpose(1, 0, 2).astype(x.dtype)                # [B,S,D]
     h = rms_norm(h, p["norm"], cfg.norm_eps)
     return dense(h, p["proj"]), state

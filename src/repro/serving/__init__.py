@@ -10,7 +10,8 @@ from repro.serving.policies import (FCFSPolicy, MemoryAwarePolicy,
                                     SchedulingPolicy, SJFPolicy, make_policy)
 from repro.serving.prefill import (BatchedPrefiller, ChunkedPrefiller,
                                    SlotPrefiller, make_prefiller)
-from repro.serving.sampling import (Sampler, greedy_sample, make_sampler,
+from repro.serving.sampling import (Sampler, greedy_sample,
+                                    make_callback_sampler, make_sampler,
                                     make_scan_sampler)
 
 __all__ = [
@@ -18,5 +19,6 @@ __all__ = [
     "SchedulingPolicy", "FCFSPolicy", "SJFPolicy", "MemoryAwarePolicy",
     "make_policy",
     "SlotPrefiller", "BatchedPrefiller", "ChunkedPrefiller", "make_prefiller",
-    "Sampler", "greedy_sample", "make_sampler", "make_scan_sampler",
+    "Sampler", "greedy_sample", "make_callback_sampler", "make_sampler",
+    "make_scan_sampler",
 ]

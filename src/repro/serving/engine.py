@@ -20,9 +20,10 @@ Two decode paths share the scheduler and prefillers:
 * ``step()`` — the per-token tick (seed semantics): rebuild the config
   buffers, dispatch ONE decode step, block on the logits, sample. Kept as
   the reference path and for callers driving the engine token-by-token.
-* the fused multi-step path (``run()`` when no legacy sampler callable is
-  installed) — ``EngineConfig.decode_horizon`` decode steps run inside one
-  jit (``models.model.decode_multi``): decode, on-device sampling, KV
+* the fused multi-step path (``run()``) — ``EngineConfig.decode_horizon``
+  decode steps run inside one jit (``models.model.decode_multi``): decode,
+  on-device sampling (legacy per-row ``sample=`` callables ride along
+  through an ordered host-callback adapter), KV
   write-position advance and per-slot EOS/budget masking all stay on
   device, so the host syncs once per horizon instead of once per token.
   The per-slot state (block table, context, current token, remaining
@@ -43,7 +44,6 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -103,6 +103,14 @@ class EngineConfig:
     # at most log2(maxp) extra jit specializations (engines with <=16-page
     # tables skip it — nothing to win there)
     decode_bucket: bool = True
+    # ---- recurrent-state preemption snapshots ----
+    # recurrent/enc-dec families: preemption snapshots the per-slot carry
+    # (SSM/xLSTM hidden + conv states, enc-dec cross KV) AND the written KV
+    # pages to host memory, so re-admission restores instead of
+    # re-prefilling — the kvcache swap story applied to dense state. Off =
+    # seed semantics (full recompute on resume). Slot-mode prefill never
+    # consumes snapshots (it is the recompute reference path).
+    state_resume: bool = True
 
 
 @dataclass
@@ -207,24 +215,39 @@ class DecodeEngine:
         self.submit_t: dict[int, float] = {}
         self.first_tok_t: dict[int, float] = {}
         # ``sample``: legacy per-row host callable (seed API); otherwise the
-        # jitted batch sampler from the config. A legacy callable cannot run
-        # inside the fused scan, so it pins run() to the per-token path.
+        # jitted batch sampler from the config. Legacy callables ride the
+        # fused scan through the ordered host-callback adapter
+        # (sampling.make_callback_sampler), so run() stays on the fused
+        # multi-step path either way.
         self.sample = sample
         self.sampler = make_sampler(ecfg.sampler, temperature=ecfg.temperature,
                                     top_k=ecfg.top_k, seed=ecfg.sample_seed)
-        # batched/chunked prefill keep the whole decode state in the shared
-        # pool; recurrent and enc-dec families need per-slot state merges,
-        # and ring / sharded-writer runtimes use prefill branches that
-        # ignore valid_len (pad-write masking) — all of those stay on the
-        # slot path.
-        self.batchable = "layers" in self.params and cfg.family != "encdec" \
-            and not self.rt.ring_width and self.rt.write_pool is None
+        # batched/chunked prefill: attention stacks keep the whole decode
+        # state in the shared pool; recurrent and enc-dec families thread
+        # their per-slot state rows through the group call as an explicit
+        # carry (gather -> prefill -> scatter). Only ring / sharded-writer
+        # runtimes stay on the slot path — their prefill branches ignore
+        # valid_len (pad-write masking).
+        self.batchable = not self.rt.ring_width and self.rt.write_pool is None
         self.chunkable = self.batchable
+        # recurrent / cross-attention per-slot state rows ([L, n_slots, ...]
+        # leaves of self.state) and their preemption snapshots
+        self.has_rstate = bool(MDL.rstate_entries(self.state))
+        self._zero_rows = (MDL.init_rstate(cfg, 1, dtype="float32")
+                           if self.has_rstate else None)
+        self.rsnaps: dict[int, dict] = {}   # req_id -> {len, rows, kv?}
+        self.rstate_snapshots = 0
+        self.rstate_restores = 0
+        self.batcher.rstate_hook = self._rstate_hook
         # prefix cache: uniform-attention stacks with plain lazy allocation
-        # only (static reservations and ring pools can't share pages, and
-        # row-affine placement would break borrowing across rows)
+        # only (static reservations and ring pools can't share pages,
+        # row-affine placement would break borrowing across rows, and
+        # recurrent/enc-dec families can't resume from shared pages without
+        # the matching dense carry)
+        self.cacheable = self.chunkable and "layers" in self.params \
+            and cfg.family != "encdec"
         self.cache = None
-        if ecfg.prefix_cache and self.chunkable and not ecfg.static_alloc \
+        if ecfg.prefix_cache and self.cacheable and not ecfg.static_alloc \
                 and ecfg.policy == "striped":
             from repro.kvcache import PrefixCache, WatermarkConfig, \
                 make_cache_policy
@@ -332,6 +355,128 @@ class DecodeEngine:
             toks[idx] = self._sample_rows(np.asarray(logits)[idx])
         return toks
 
+    # ---- recurrent state rows: snapshots, restore, group gather ---------
+    def _rstate_hook(self, req, slot: int, finished: bool) -> None:
+        """Scheduler callback at page release. Preemption (finished=False)
+        snapshots the slot's recurrent/cross state rows plus its written KV
+        pages to host memory — the dense-state analogue of the kvcache
+        swap-out — so re-admission restores instead of recomputing.
+        Completion drops any stored snapshot."""
+        if finished:
+            self.rsnaps.pop(req.req_id, None)
+            return
+        if not (self.has_rstate and self.ecfg.state_resume
+                and req.kv_written and self.prefiller.name != "slot"):
+            return
+        if not self.outputs.get(req.req_id):
+            # no token ever sampled (prefill finished but the finish-line
+            # growth page failed): a pure restore could never produce the
+            # first token — no logits without a model call — so resume
+            # must recompute; snapshotting would strand the request
+            return
+        # written context: the last sampled token's KV/state never landed
+        # (it re-enters as the next decode input), and ``generated`` was
+        # pre-incremented this tick — mirrors _preempt's total_len - 1
+        depth = req.total_len - (1 if req.generated else 0)
+        if depth <= 0:
+            return
+        snap = {"len": depth,
+                "rows": jax.tree.map(np.asarray,
+                                     MDL.gather_rstate(self.state, [slot]))}
+        if "pool" in self.state:
+            from repro.core.paged_kv import gather_pages
+            n = -(-depth // self.ecfg.page_size)
+            pages = np.asarray(self.batcher.block_table_row(slot)[:n])
+            k, v = gather_pages(self.state["pool"]["k"],
+                                self.state["pool"]["v"], jnp.asarray(pages))
+            snap["kv"] = (np.asarray(k), np.asarray(v))
+        self.rsnaps[req.req_id] = snap
+        self.rstate_snapshots += 1
+
+    def _take_snapshot(self, req) -> dict | None:
+        if not self.ecfg.state_resume:
+            return None
+        return self.rsnaps.pop(req.req_id, None)
+
+    def _begin_prefill_group(self, admitted) -> tuple[dict, set]:
+        """Prepare the tick's admitted slots for prefill in ONE rows
+        scatter: preemption snapshots restore the carry (and their KV
+        pages) at their depth, everything else resets to zero so group
+        prefill gathers a clean carry (the row may hold a freed request's
+        state). Returns ``({slot: resume_depth}, {restored slots})`` —
+        depth is the snapshot depth or the prefix-cache depth (0 when
+        cold). Enc-dec cross-KV rows are NOT materialized here — batched
+        prefill computes them inside the group call, chunked prefill
+        batches them per tick (``_init_cross_rows``)."""
+        starts: dict[int, int] = {}
+        fresh: list[int] = []
+        restores: list[tuple[int, dict]] = []
+        for slot, req in admitted:
+            snap = self._take_snapshot(req)
+            if snap is not None:
+                restores.append((slot, snap))
+                starts[slot] = snap["len"]
+            else:
+                fresh.append(slot)
+                starts[slot] = req.cached_len
+        if self.has_rstate and (fresh or restores):
+            parts = []
+            if fresh:
+                parts.append(jax.tree.map(
+                    lambda z: jnp.repeat(z, len(fresh), axis=1),
+                    self._zero_rows))
+            parts += [jax.tree.map(jnp.asarray, snap["rows"])
+                      for _, snap in restores]
+            self.state = MDL.scatter_rstate(
+                self.state, fresh + [s for s, _ in restores],
+                jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                             *parts))
+        for slot, snap in restores:
+            if "kv" in snap:
+                from repro.core.paged_kv import scatter_pages
+                k, v = snap["kv"]
+                pages = self.batcher.block_table_row(slot)[:k.shape[1]]
+                pk, pv = scatter_pages(self.state["pool"]["k"],
+                                       self.state["pool"]["v"],
+                                       jnp.asarray(np.asarray(pages)),
+                                       jnp.asarray(k), jnp.asarray(v))
+                self.state["pool"] = {"k": pk, "v": pv}
+        self.rstate_restores += len(restores)
+        return starts, {s for s, _ in restores}
+
+    def _init_cross_rows(self, slots: list[int]) -> None:
+        """Encoder pass + cross-KV projection for enc-dec chunked prefill
+        (stub zero frames, matching the slot path)."""
+        frames = jnp.zeros((len(slots), self.cfg.enc_seq, self.cfg.d_model),
+                           jnp.float32)
+        enc_out = MDL.encode(self.cfg, self.params, frames)
+        ck, cv = MDL.make_cross_kv(self.cfg, self.params, enc_out)
+        self.state = MDL.scatter_rstate(self.state, slots,
+                                        {"cross_k": ck, "cross_v": cv})
+
+    def _group_prefill_state(self, slots: list[int]) -> dict:
+        """State for a group prefill call: the shared pool plus the group's
+        recurrent/cross rows gathered from the engine state (zeroed /
+        restored by ``_begin_prefill``, or mid-stream carries for chunked
+        prefill)."""
+        gs: dict[str, Any] = {}
+        if "pool" in self.state:
+            gs["pool"] = self.state["pool"]
+        if self.has_rstate:
+            gs.update(MDL.gather_rstate(self.state,
+                                        np.asarray(slots, np.int32)))
+        return gs
+
+    def _merge_group_state(self, slots: list[int], gstate: dict) -> None:
+        """Fold a group prefill's result back: adopt the pool, scatter the
+        group's state rows into their slots."""
+        if "pool" in gstate:
+            self.state["pool"] = gstate["pool"]
+        if self.has_rstate:
+            self.state = MDL.scatter_rstate(
+                self.state, np.asarray(slots, np.int32),
+                MDL.rstate_entries(gstate))
+
     # ------------------------------------------------------------------
     def step(self, finished_mask=None):
         """One per-token engine tick: schedule -> prefill -> decode ->
@@ -396,17 +541,20 @@ class DecodeEngine:
             from repro.serving.prefill import decode_table_bucket
             bt = bt[:, :decode_table_bucket(self.batcher.max_live_pages(), W)]
         if self._decode_jit is None:
-            def fn(params, state, tokens, bt, ctx, npage, noff):
+            def fn(params, state, tokens, bt, ctx, npage, noff, run):
                 return MDL.decode_step(self.cfg, params, state, tokens, bt,
-                                       ctx, npage, noff, rt=self.rt)
+                                       ctx, npage, noff, run=run, rt=self.rt)
             self._decode_jit = jax.jit(fn)
         t4 = time.perf_counter()
         self.timing.host_s += t4 - t3
 
+        # ``run`` masks the recurrent-state advance: idle and mid-chunk-
+        # prefill slots must not absorb their stale pending token (their
+        # attention KV writes already drop via the out-of-bounds npage)
         logits, self.state = self._decode_jit(
             self.params, self.state, jnp.asarray(self.tokens),
             jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(npage),
-            jnp.asarray(noff))
+            jnp.asarray(noff), jnp.asarray(active_mask))
         logits = np.asarray(logits)
         self.timing.device_syncs += 1
         if self.sample is not None:    # legacy per-row callable: active only
@@ -437,8 +585,15 @@ class DecodeEngine:
     # ---- fused multi-step path ---------------------------------------
     def _make_fused(self):
         E, cfg, rt = self.ecfg, self.cfg, self.rt
-        sample = make_scan_sampler(E.sampler, temperature=E.temperature,
-                                   top_k=E.top_k)
+        if self.sample is not None:
+            # legacy per-row host callable: adapted into the scan-sampler
+            # signature via an ordered host callback, so run() keeps the
+            # fused multi-step path instead of pinning to per-token decode
+            from repro.serving.sampling import make_callback_sampler
+            sample = make_callback_sampler(self.sample)
+        else:
+            sample = make_scan_sampler(E.sampler, temperature=E.temperature,
+                                       top_k=E.top_k)
 
         def fn(params, state, tokens, bt, ctx, rem, allow, key, *,
                horizon, width):
@@ -568,15 +723,6 @@ class DecodeEngine:
         self.timing.decode_s += time.perf_counter() - t5
 
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
-        if self.sample is not None:
-            # legacy per-row sampler callables can't run on device: keep the
-            # per-token reference loop
-            finished = None
-            for _ in range(max_steps):
-                if self.batcher.done():
-                    break
-                finished = self.step(finished)
-            return self.outputs
         for _ in range(max_steps):
             if self._inflight is None and self.batcher.done():
                 break

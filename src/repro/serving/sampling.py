@@ -56,6 +56,39 @@ def stochastic_sample_step(key, logits, temperature=1.0, top_k: int = 0):
     return key, _stochastic(sub, logits, temperature, top_k)
 
 
+def make_callback_sampler(fn):
+    """Adapt a legacy per-row host callable ``logits [V] -> token`` into
+    the ``(key, logits [B, V], run [B]) -> tokens [B]`` scan-sampler
+    signature, so engines constructed with the seed ``sample=`` API still
+    run the fused multi-step decode path.
+
+    The callable executes on the host through an *ordered* ``io_callback``
+    (legacy samplers may be stateful), one callback per decode step; it is
+    invoked for rows with ``run=True`` only, in ascending slot order —
+    exactly the per-token path's active-rows-only invocation pattern, so
+    stateful callables consume their state identically under both APIs.
+    The PRNG key is unused; non-running rows return 0 (the fused scan
+    masks them out on device)."""
+    from jax.experimental import io_callback
+
+    def rows(logits, run):
+        arr = np.asarray(logits)
+        live = np.asarray(run)
+        out = np.zeros((len(arr),), np.int32)
+        for i in np.flatnonzero(live):
+            out[i] = int(fn(arr[i]))
+        return out
+
+    def sampler(key, logits, run):
+        return io_callback(
+            rows, jax.ShapeDtypeStruct((logits.shape[0],), jnp.int32),
+            logits, run, ordered=True)
+    # explicit opt-in marker (models.model.decode_multi) — signature
+    # sniffing would misfire on samplers with defaulted extra params
+    sampler.takes_run = True
+    return sampler
+
+
 def make_scan_sampler(kind: str = "greedy", *, temperature: float = 1.0,
                       top_k: int = 0):
     """Pure ``(key, logits [B, V]) -> tokens [B]`` for use INSIDE jit/scan.

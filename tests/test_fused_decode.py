@@ -167,6 +167,65 @@ def test_reserve_horizon_degrades_instead_of_preempting():
     assert 0 in sched.dirty or 0 in sched2.dirty
 
 
+def test_legacy_sampler_callable_rides_the_fused_path():
+    """Engines built with the seed per-row ``sample=`` callable no longer
+    pin run() to per-token decode: the callback adapter threads the host
+    callable through the fused scan, outputs match the jitted greedy
+    sampler, and host syncs still drop ~K-fold."""
+    cfg, params = _setup()
+
+    def make(sample, K):
+        ecfg = EngineConfig(n_slots=3, page_size=PAGE, n_pages=96,
+                            max_context=64, eos_token=-1, decode_horizon=K)
+        eng = DecodeEngine(cfg, ecfg, params, sample=sample)
+        rng = np.random.default_rng(3)
+        for r in range(6):
+            eng.submit(r, rng.integers(0, cfg.vocab_size,
+                                       size=int(rng.integers(3, 20))),
+                       BUDGETS[r])
+        eng.run(3000)
+        return eng
+
+    base, _ = _run(8)                  # jitted greedy sampler reference
+    legacy = make(lambda row: int(np.argmax(row)), 8)
+    assert {k: list(v) for k, v in legacy.outputs.items()} == base
+    assert legacy.batcher.stats.completed == 6
+    legacy1 = make(lambda row: int(np.argmax(row)), 1)
+    t8, t1 = legacy.timing, legacy1.timing
+    assert t8.decode_tokens == t1.decode_tokens
+    assert t8.device_syncs * 4 <= t1.device_syncs
+
+    # stateful callable: the adapter invokes it for RUNNING rows only (in
+    # slot order), so its state stream matches the per-token step() loop's
+    # active-rows-only pattern exactly — all-rows invocation would consume
+    # extra state on idle rows and diverge
+    def make_stateful():
+        n = [0]
+
+        def s(row):
+            n[0] += 1
+            return int(np.argsort(row)[-1 - (n[0] % 3)])
+        return s
+
+    fused = make(make_stateful(), 1)   # run() at K=1: same event order
+    ecfg = EngineConfig(n_slots=3, page_size=PAGE, n_pages=96,
+                        max_context=64, eos_token=-1, decode_horizon=1)
+    eng = DecodeEngine(cfg, ecfg, params, sample=make_stateful())
+    rng = np.random.default_rng(3)
+    for r in range(6):
+        eng.submit(r, rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(3, 20))),
+                   BUDGETS[r])
+    fin = None
+    for _ in range(3000):
+        if eng.batcher.done():
+            break
+        fin = eng.step(fin)
+    assert {k: list(v) for k, v in fused.outputs.items()} == \
+        {k: list(v) for k, v in eng.outputs.items()}
+    assert fused.batcher.stats.completed == 6
+
+
 def test_mixed_step_and_run_apis_stay_identical():
     """The public per-token step() interleaves with the fused run():
     step() advances host state only, so it must dirty its rows for the

@@ -85,6 +85,44 @@ def test_ssm_scan_sweep(B, S, H, N, P, chunk):
     np.testing.assert_allclose(np.asarray(st_), np.asarray(Cref), atol=1e-4)
 
 
+def test_ssm_scan_state_carry_and_tail_mask():
+    """Chunk-boundary continuation: feeding the returned state back in
+    resumes the scan exactly (split-invariance), and ``valid_len`` masks a
+    length-bucketed pad tail into identity steps so the returned state
+    stops at each row's true last token."""
+    B, S, H, N, P = 2, 16, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    q = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    lg = jax.random.normal(ks[4], (B, S, H)) * 0.2
+    h0 = jax.random.normal(ks[5], (B, H, N, P)) * 0.3
+    h0_ref = (h0, jnp.zeros((B, H, N)), jnp.zeros((B, H)))
+
+    # carry in/out: two half-scans == one full scan from the same state
+    y1, s1 = ssm_chunk_scan(q[:, :8], k[:, :8], v[:, :8], la[:, :8],
+                            lg[:, :8], chunk=4, state=h0, interpret=True)
+    y2, s2 = ssm_chunk_scan(q[:, 8:], k[:, 8:], v[:, 8:], la[:, 8:],
+                            lg[:, 8:], chunk=4, state=s1, interpret=True)
+    yref, (Cref, _, _) = ref.ssm_chunk_scan_ref(q, k, v, la, lg, h0_ref, 4)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1),
+                               np.asarray(yref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(Cref), atol=1e-4)
+
+    # masked tail: row 0 valid to 10, row 1 full — pow2 bucketing stays
+    # valid because pads never touch the carry
+    _, sm = ssm_chunk_scan(q, k, v, la, lg, chunk=4, state=h0,
+                           valid_len=jnp.asarray([10, S]), interpret=True)
+    _, (C10, _, _) = ref.ssm_chunk_scan_ref(
+        q[:1, :10], k[:1, :10], v[:1, :10], la[:1, :10], lg[:1, :10],
+        tuple(x[:1] for x in h0_ref), 2)
+    np.testing.assert_allclose(np.asarray(sm[0]), np.asarray(C10[0]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sm[1]), np.asarray(Cref[1]),
+                               atol=1e-4)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,Sq,H,KVH,D,causal,window", [
     (2, 16, 4, 2, 16, True, 0),

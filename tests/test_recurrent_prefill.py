@@ -1,0 +1,241 @@
+"""State-carrying chunked/batched prefill for recurrent hybrids (xlstm,
+zamba2) and enc-dec stacks: token-identity vs the per-slot recompute path
+across chunk sizes, fused horizons and preemption/resume, plus the
+recurrent-row hygiene regressions (reset on slot refill, no decode
+advance for mid-prefill rows)."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model as MDL
+from repro.models import ssm as SSM
+from repro.serving import DecodeEngine, EngineConfig
+
+PAGE = 4
+_SHARED = {}
+
+
+def tiny(name):
+    layers = 19 if name.startswith("zamba") else None
+    return replace(reduced(get_config(name), layers=layers), dtype="float32")
+
+
+def _setup(name):
+    if name not in _SHARED:
+        cfg = tiny(name)
+        _SHARED[name] = (cfg, MDL.init_params(cfg, jax.random.PRNGKey(0),
+                                              jnp.float32))
+    return _SHARED[name]
+
+
+def _run(name, mode, *, chunk=5, horizon=1, n_pages=96, nreq=4, budget=5,
+         state_resume=True, submit=None):
+    cfg, params = _setup(name)
+    ecfg = EngineConfig(n_slots=2, page_size=PAGE, n_pages=n_pages,
+                        max_context=64, eos_token=-1, prefill_mode=mode,
+                        prefill_chunk=chunk, decode_horizon=horizon,
+                        state_resume=state_resume)
+    eng = DecodeEngine(cfg, ecfg, params)
+    if submit is None:
+        rng = np.random.default_rng(0)
+        for r in range(nreq):
+            eng.submit(r, rng.integers(0, cfg.vocab_size,
+                                       size=int(rng.integers(3, 18))), budget)
+    else:
+        submit(eng)
+    outs = eng.run(3000)
+    return {k: list(v) for k, v in outs.items()}, eng
+
+
+# ---------------------------------------------------------------------------
+# masked recurrent forwards: the bucketing primitive
+# ---------------------------------------------------------------------------
+
+def test_masked_forwards_match_unpadded_state():
+    """Pad positions must be identity steps: the state returned for a
+    padded+masked batch equals the state of the unpadded run, per row."""
+    zc, _ = _setup("zamba2-1.2b")
+    xc, _ = _setup("xlstm-350m")
+    B, T, pad = 2, 6, 5
+    vl = jnp.asarray([4, 6])
+    mask = jnp.arange(T + pad)[None] < vl[:, None]
+    key = jax.random.PRNGKey(0)
+
+    p = SSM.init_mamba(key, zc, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, zc.d_model)) * 0.5
+    xp = jnp.concatenate([x, jnp.zeros((B, pad, zc.d_model))], 1)
+    _, st = SSM.mamba_forward(p, zc, xp, state=SSM.mamba_init_state(zc, B),
+                              chunk=128, mask=mask)
+    for b, n in enumerate([4, 6]):
+        _, ref = SSM.mamba_forward(p, zc, x[b:b + 1, :n],
+                                   state=SSM.mamba_init_state(zc, 1),
+                                   chunk=128)
+        for a, r in zip(jax.tree.leaves(st), jax.tree.leaves(ref)):
+            np.testing.assert_allclose(np.asarray(a[b]), np.asarray(r[0]),
+                                       atol=1e-5)
+
+    pm = SSM.init_mlstm(key, xc, jnp.float32)
+    ps = SSM.init_slstm(key, xc, jnp.float32)
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (B, T, xc.d_model)) * 0.5
+    x2p = jnp.concatenate([x2, jnp.zeros((B, pad, xc.d_model))], 1)
+    _, stm = SSM.mlstm_forward(pm, xc, x2p, state=SSM.mlstm_init_state(xc, B),
+                               chunk=128, mask=mask)
+    _, sts = SSM.slstm_forward(ps, xc, x2p, mask=mask)
+    for b, n in enumerate([4, 6]):
+        _, rm = SSM.mlstm_forward(pm, xc, x2[b:b + 1, :n],
+                                  state=SSM.mlstm_init_state(xc, 1),
+                                  chunk=128)
+        _, rs = SSM.slstm_forward(ps, xc, x2[b:b + 1, :n])
+        for a, r in zip(jax.tree.leaves(stm), jax.tree.leaves(rm)):
+            np.testing.assert_allclose(np.asarray(a[b]), np.asarray(r[0]),
+                                       atol=1e-5)
+        for a, r in zip(jax.tree.leaves(sts), jax.tree.leaves(rs)):
+            np.testing.assert_allclose(np.asarray(a[b]), np.asarray(r[0]),
+                                       atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine-level token identity: batched / chunked vs per-slot recompute
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "zamba2-1.2b",
+                                  "whisper-small"])
+def test_batched_and_chunked_match_slot(arch):
+    """Every prefill mode emits token-identical greedy outputs on recurrent
+    and enc-dec families, across chunk sizes and fused horizons (paused and
+    mid-prefill rows must not advance their carry)."""
+    base, eng_s = _run(arch, "slot")
+    assert eng_s.prefiller.name == "slot"
+    assert eng_s.batcher.stats.completed == 4
+
+    got, eng_b = _run(arch, "batched")
+    assert eng_b.prefiller.name == "batched"
+    assert got == base
+
+    for chunk in (3, 5, 8):
+        got, eng_c = _run(arch, "chunked", chunk=chunk)
+        assert eng_c.prefiller.name == "chunked"
+        assert got == base, chunk
+        assert eng_c.alloc.pages_in_use == 0
+
+    # fused horizons: decode interleaves with streaming chunks
+    for mode in ("batched", "chunked"):
+        got, eng_h = _run(arch, mode, horizon=4)
+        assert got == base, mode
+        assert eng_h.batcher.stats.completed == 4
+
+
+def test_chunked_prefill_interleaves_with_recurrent_decode():
+    """While a long prompt chunk-prefills, an already-running request keeps
+    decoding — and its trajectory is untouched by the mid-prefill rows
+    (the decode run-mask guards their carry)."""
+    def submit(eng):
+        eng.submit(0, [3, 5, 7], 10)            # short: decodes early
+        eng.submit(1, list(range(1, 20)), 4)    # long: several chunk ticks
+
+    got_c, eng_c = _run("xlstm-350m", "chunked", chunk=4, submit=submit)
+    got_s, _ = _run("xlstm-350m", "slot", submit=submit)
+    assert got_c == got_s
+    assert any(b == 1 for b in eng_c.batcher.stats.batch_trace[:6])
+
+
+# ---------------------------------------------------------------------------
+# preemption: snapshot the carry, resume = restore-not-recompute
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "zamba2-1.2b"])
+def test_preemption_resume_restores_carry(arch):
+    """Pool-exhaustion preemption under batched/chunked prefill resumes
+    from the host snapshot of the recurrent carry (and written KV pages for
+    hybrids) token-identically — and actually restores instead of
+    recomputing. state_resume=False keeps the recompute path, also
+    token-identical."""
+    kw = dict(nreq=2, budget=12)
+    ample, _ = _run(arch, "batched", n_pages=96, **kw)
+    for mode in ("batched", "chunked"):
+        tight, eng = _run(arch, mode, n_pages=9, **kw)
+        assert eng.batcher.stats.preempted > 0, mode
+        assert eng.rstate_snapshots > 0, mode
+        assert eng.rstate_restores > 0, mode
+        assert eng.batcher.stats.completed == 2, mode
+        assert tight == ample, mode
+        assert eng.alloc.pages_in_use == 0
+        assert not eng.rsnaps          # snapshots consumed or dropped
+    # recompute fallback: same trajectory without any restore
+    tight, eng = _run(arch, "batched", n_pages=9, state_resume=False, **kw)
+    assert eng.batcher.stats.preempted > 0
+    assert eng.rstate_restores == 0
+    assert tight == ample
+    # the seed recompute reference (slot) agrees too
+    tight, eng = _run(arch, "slot", n_pages=9, **kw)
+    assert eng.rstate_restores == 0
+    assert tight == ample
+
+
+def test_finish_line_preemption_with_no_emitted_token_recomputes():
+    """Pool exhaustion exactly when the last prefill chunk completes
+    (mark_prefill_done's growth page fails) preempts a request that never
+    sampled a token. No snapshot may be stored for it — a pure restore
+    could never produce the first token (no logits without a model call) —
+    so resume recomputes; outputs still match an ample pool."""
+    cfg, params = _setup("xlstm-350m")
+
+    def run(n_pages):
+        ecfg = EngineConfig(n_slots=2, page_size=PAGE, n_pages=n_pages,
+                            max_context=64, eos_token=-1,
+                            prefill_mode="chunked", prefill_chunk=4)
+        eng = DecodeEngine(cfg, ecfg, params)
+        for r in range(4):
+            eng.submit(r, np.arange(1 + r, 13 + r, dtype=np.int32), 5)
+        outs = eng.run(3000)
+        return {k: list(v) for k, v in outs.items()}, eng
+
+    ample, _ = run(96)
+    for pages in (6, 7):
+        tight, eng = run(pages)
+        assert eng.batcher.stats.preempted > 0, pages
+        assert eng.batcher.stats.completed == 4, pages
+        assert tight == ample, pages
+        assert eng.alloc.pages_in_use == 0
+
+
+def test_restore_covers_whole_context_without_model_call():
+    """The common decode-preemption case: the snapshot depth equals the
+    reconstructable context, so resume is a pure restore (no prefill
+    compute) — detectable as zero prefill growth in jitted suffix calls."""
+    _, eng = _run("xlstm-350m", "batched", n_pages=9, nreq=2, budget=12)
+    assert eng.rstate_restores == eng.rstate_snapshots > 0
+
+
+# ---------------------------------------------------------------------------
+# recurrent-row hygiene (the DeviceSlotState dirty-patch regression)
+# ---------------------------------------------------------------------------
+
+def test_recurrent_rows_reset_on_slot_refill():
+    """A freed slot's recurrent rows hold the dead request's carry; the
+    next admission into that slot must start from zeros. Run two requests
+    through ONE slot sequentially and compare the second request's output
+    with a fresh engine — stale rows would corrupt it."""
+    cfg, params = _setup("xlstm-350m")
+    rng = np.random.default_rng(1)
+    p0 = rng.integers(0, cfg.vocab_size, size=9)
+    p1 = rng.integers(0, cfg.vocab_size, size=11)
+
+    def eng_with(prompts):
+        ecfg = EngineConfig(n_slots=1, page_size=PAGE, n_pages=64,
+                            max_context=64, eos_token=-1,
+                            prefill_mode="batched", decode_horizon=4)
+        eng = DecodeEngine(cfg, ecfg, params)
+        for r, p in enumerate(prompts):
+            eng.submit(r, p, 6)
+        eng.run(2000)
+        return eng
+
+    both = eng_with([p0, p1])
+    solo = eng_with([p1])
+    assert both.batcher.stats.completed == 2
+    assert list(both.outputs[1]) == list(solo.outputs[0])

@@ -103,12 +103,15 @@ def test_preemption_resume_is_token_identical():
         assert tight == ample, mode
 
 
-def test_recurrent_family_falls_back_to_slot_prefill():
+def test_recurrent_family_gets_requested_prefill_mode():
+    """Recurrent hybrids no longer fall back to per-slot prefill: the
+    state-carrying chunked/batched paths serve them directly (the deeper
+    token-identity sweeps live in tests/test_recurrent_prefill.py)."""
     cfg = tiny("xlstm-350m")
     ecfg = EngineConfig(n_slots=2, page_size=PAGE, n_pages=32, max_context=24,
                         eos_token=-1, prefill_mode="chunked")
     eng = DecodeEngine(cfg, ecfg)
-    assert eng.prefiller.name == "slot"
+    assert eng.prefiller.name == "chunked"
     for r in range(2):
         eng.submit(r, [2, 4, 6], 3)
     outs = eng.run(200)
