@@ -6,11 +6,12 @@ runners is noisy, so the gate is built from three layers of decreasing
 trust:
 
 * **deterministic counters** (hard gate, no tolerance beyond rounding) —
-  ``syncs_per_token`` and emitted ``tokens`` per serving row are functions
-  of the code and the seeded trace alone: a fresh value above baseline
-  means an extra host<->device rendezvous or a changed trajectory snuck
-  into the tick. Kernel ``maxerr`` must stay at numerical-noise level and
-  every baseline row must still be present.
+  ``syncs_per_token``, emitted ``tokens`` and (on speculative rows) the
+  ``accept_len_mean`` counter per serving row are functions of the code
+  and the seeded trace alone: a fresh value above baseline means an extra
+  host<->device rendezvous, a changed trajectory, or a broken
+  draft/verify path snuck into the tick. Kernel ``maxerr`` must stay at
+  numerical-noise level and every baseline row must still be present.
 * **within-run normalized timings** (gated with ``--tol``, default 20%) —
   every row's ``decode_tok_s`` and ``ttft_ms`` are normalized to the same
   run's reference row (slot prefill, horizon 1, default arch), which
@@ -81,6 +82,7 @@ def _norm(rows: list[dict]) -> dict[tuple, dict]:
                      if r["ttft_ms"] > 0 and ref["ttft_ms"] > 0 else None),
             "syncs": r["syncs_per_token"],
             "tokens": r["tokens"],
+            "accept": r.get("accept_len_mean"),
             "abs_thr": r["decode_tok_s"],
             "abs_ttft": r["ttft_ms"],
         }
@@ -114,6 +116,17 @@ def check_serving(base: dict, fresh_runs: list[dict], tol: float,
         if tokens != br["tokens"]:
             fails.append(f"serving {key}: emitted tokens changed "
                          f"{br['tokens']} -> {tokens} (trajectory change)")
+        # speculative rows: mean accept length is a function of the code
+        # and the seeded trace alone (the oracle draft proposes the
+        # target's own greedy tokens), so any drop means the draft pool,
+        # verify pass or accept bookkeeping broke — hard gate, and it must
+        # stay strictly above the no-speculation floor of 1.0
+        if br.get("accept") is not None:
+            acc = _median([fr.get("accept") for fr in frs])
+            if acc is None or acc < br["accept"] - 1e-6 or acc <= 1.0:
+                fails.append(f"serving {key}: accept_len_mean regressed "
+                             f"{br['accept']:.3f} -> "
+                             f"{'missing' if acc is None else f'{acc:.3f}'}")
         # ---- normalized timings: tolerance gate on the median ----
         # decode_tok_s only carries signal on decode-dominated traces
         # (the prefill/recurrent sections emit ~6-8 tokens per request —

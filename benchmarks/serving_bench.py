@@ -11,6 +11,12 @@ orchestration (one jit per admission bucket, the vectorized config-buffer
 assembly, and the fused multi-step scan amortizing dispatch/sync/sample
 round-trips over K tokens), not changed math.
 
+The ``--draft`` section (on by default) adds speculative decoding over the
+decode-dominated trace: an oracle draft pair whose greedy proposals are
+bit-identical to the target's (see ``_spec_setup``) reports mean accept
+length, the param-weighted draft-overhead fraction, and end-to-end decode
+tokens/s against the fused horizon-8 scan on the same target.
+
 ``--json PATH`` writes the full result table as machine-readable JSON
 (``BENCH_serving.json`` in CI) so the perf trajectory is tracked across
 PRs; ``--smoke`` shrinks the trace for CI.
@@ -24,8 +30,10 @@ from dataclasses import replace
 import numpy as np
 
 _PARAMS = {}
+_SPEC = {}
 
 HORIZONS = (1, 4, 8)
+SPEC_HORIZON = 15
 
 
 def _setup(arch: str = "llama3.2-1b"):
@@ -40,24 +48,73 @@ def _setup(arch: str = "llama3.2-1b"):
     return _PARAMS[arch]
 
 
+def _spec_setup(arch: str = "llama3.2-1b"):
+    """Oracle draft pair for the speculative section: the target gets layer
+    2's write-back projections (attn ``wo`` + mlp down-proj) zeroed, so the
+    second layer contributes exactly +0.0 to the residual stream at
+    UNCHANGED per-step cost; the draft is the 1-layer reduced config whose
+    params are the target's first-layer slice plus the shared embed /
+    final-norm (tied head). Draft logits are therefore bit-identical to the
+    target's and greedy verification accepts every proposal — the bench
+    isolates the serving-side speculative machinery (proposal scan,
+    catch-up, one-pass verify, accept bookkeeping) from draft quality, and
+    the measured speedup is the machinery's ceiling at the 1-vs-2-layer
+    cost ratio."""
+    import jax
+    from repro.configs import get_config, reduced
+    if arch not in _SPEC:
+        cfg, params = _setup(arch)
+        attn = dict(params["layers"]["attn"])
+        mlp = dict(params["layers"]["mlp"])
+        attn["wo"] = attn["wo"].at[1].set(0.0)
+        mlp["w2"] = mlp["w2"].at[1].set(0.0)
+        layers = dict(params["layers"], attn=attn, mlp=mlp)
+        tparams = dict(params, layers=layers)
+        dcfg = replace(reduced(get_config(arch), layers=1), dtype="float32")
+        dparams = {k: v for k, v in tparams.items() if k != "layers"}
+        dparams["layers"] = jax.tree.map(lambda x: x[:1], layers)
+        _SPEC[arch] = (cfg, tparams, dcfg, dparams)
+    return _SPEC[arch]
+
+
 def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
           chunk: int = 16, horizon: int = 1, new_tokens: int = 8,
-          max_prompt: int = 64, warmup: int = 2) -> dict:
+          max_prompt: int = 64, warmup: int = 2, oracle: bool = False,
+          spec: int | None = None) -> dict:
     """One engine over the seeded trace. ``warmup`` requests (same length
     distribution, ids >= 1000) run first so the timed phase measures
     steady-state dispatch, not jit compiles; decode throughput is the timed
-    phase's decode tokens over its non-prefill wall."""
+    phase's decode tokens over its non-prefill wall.
+
+    ``oracle`` swaps in the zeroed-layer-2 target from ``_spec_setup`` (and
+    replays the timed trace's own lengths as warmup, so every shape bucket
+    the speculative path touches — catch-up batch/chunk, block-table width —
+    is compiled before the clock starts); ``spec`` additionally enables the
+    draft engine with that proposal horizon."""
     from repro.serving import DecodeEngine, EngineConfig
-    cfg, params = _setup(arch)
+    if oracle or spec is not None:
+        cfg, params, dcfg, dparams = _spec_setup(arch)
+    else:
+        cfg, params = _setup(arch)
+        dcfg = dparams = None
     ecfg = EngineConfig(n_slots=4, page_size=8, n_pages=160, max_context=128,
                         eos_token=-1, prefill_mode=mode, prefill_chunk=chunk,
-                        decode_horizon=horizon)
-    eng = DecodeEngine(cfg, ecfg, params)
+                        decode_horizon=horizon,
+                        draft_config=dcfg if spec is not None else None,
+                        spec_horizon=spec if spec is not None else 4)
+    eng = DecodeEngine(cfg, ecfg, params,
+                       draft_params=dparams if spec is not None else None)
+    if oracle or spec is not None:
+        rng = np.random.default_rng(0)
+        wlens = [int(rng.integers(8, max_prompt)) for _ in range(requests)]
+    else:
+        wlens = None
     rng = np.random.default_rng(7)
-    for i in range(warmup):
+    for i in range(warmup if wlens is None else len(wlens)):
         eng.submit(1000 + i,
                    rng.integers(0, cfg.vocab_size,
-                                size=int(rng.integers(8, max_prompt))),
+                                size=(wlens[i] if wlens is not None
+                                      else int(rng.integers(8, max_prompt)))),
                    new_tokens)
     eng.run(10_000)
     tm0 = dict(eng.timing.as_dict())
@@ -75,7 +132,23 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
     dpre = tm["prefill_s"] - tm0["prefill_s"]
     syncs = tm["device_syncs"] - tm0["device_syncs"]
     ttft = [eng.first_tok_t[r] - eng.submit_t[r] for r in outs]
+    extra = {}
+    if spec is not None:
+        from repro.models import model as MDL
+        # draft-overhead fraction: structural (param-count-weighted) share
+        # of forward work spent proposing — Σnprop draft steps against
+        # Σ(nprop+1) target verify positions, machine-independent
+        pd = MDL.param_count_actual(dparams)
+        pt = MDL.param_count_actual(params)
+        dwork = eng.spec_proposed * pd
+        twork = (eng.spec_proposed + eng.spec_rounds) * pt
+        extra = {"accept_len_mean":
+                 1 + eng.spec_accepted / max(1, eng.spec_rounds),
+                 "spec_rounds": eng.spec_rounds,
+                 "spec_horizon": spec,
+                 "draft_overhead_frac": dwork / max(1, dwork + twork)}
     return {"mode": eng.prefiller.name, "arch": arch, "horizon": horizon,
+            **extra,
             "tok_s": toks / max(dt, 1e-9),
             "decode_tok_s": dtoks / max(dt - dpre, 1e-9),
             "ttft_ms": 1e3 * float(np.mean(ttft)) if ttft else 0.0,
@@ -91,7 +164,7 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
             "outputs": {k: list(v) for k, v in outs.items()}}
 
 
-def run(emit, *, smoke: bool = False):
+def run(emit, *, smoke: bool = False, draft: bool = True):
     kw = dict(requests=4, new_tokens=6, warmup=1) if smoke else {}
     hkw = dict(kw, new_tokens=6 if smoke else 64)   # decode-dominated trace
     results = []
@@ -149,6 +222,29 @@ def run(emit, *, smoke: bool = False):
              f"prefill_s={r['prefill_s']:.2f} "
              f"speedup={r['tok_s'] / max(rbase['tok_s'], 1e-9):.2f}x "
              f"ttft_speedup={rbase['ttft_ms'] / max(r['ttft_ms'], 1e-9):.2f}x")
+    if draft:
+        # speculative decode over the decode-dominated trace: the oracle
+        # draft pair (zeroed-layer-2 target + bit-identical 1-layer slice,
+        # see _spec_setup) against the same target running the fused
+        # horizon-8 scan alone. Greedy outputs must be token-identical and
+        # every proposal must be accepted — check_regression.py hard-gates
+        # the accept-length counter alongside syncs/tokens
+        sbase = keep(bench("batched", horizon=8, oracle=True, **hkw), "spec")
+        emit("serving_spec_target", sbase["decode_step_us"],
+             f"decode_tok/s={sbase['decode_tok_s']:.0f} "
+             f"syncs/tok={sbase['syncs_per_token']:.3f} speedup=1.00x")
+        r = keep(bench("batched", horizon=1, spec=SPEC_HORIZON, oracle=True,
+                       **hkw), "spec")
+        assert r["outputs"] == sbase["outputs"], \
+            "speculative decode changed greedy outputs"
+        assert r["accept_len_mean"] > 1.0, \
+            f"oracle draft accept_len_mean={r['accept_len_mean']:.2f} <= 1"
+        emit("serving_spec_draft", r["decode_step_us"],
+             f"decode_tok/s={r['decode_tok_s']:.0f} "
+             f"accept_len={r['accept_len_mean']:.2f} "
+             f"draft_frac={r['draft_overhead_frac']:.3f} "
+             f"syncs/tok={r['syncs_per_token']:.3f} "
+             f"speedup={r['decode_tok_s'] / max(sbase['decode_tok_s'], 1e-9):.2f}x")
     return results
 
 
@@ -164,12 +260,16 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true", help="tiny trace for CI")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write results as JSON (e.g. BENCH_serving.json)")
+    ap.add_argument("--draft", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="include the speculative-decode section (oracle "
+                         "draft pair; --no-draft skips it)")
     args = ap.parse_args(argv)
 
     def emit(name, us, derived):
         print(f"{name},{us:.2f},{derived}", flush=True)
 
-    results = run(emit, smoke=args.smoke)
+    results = run(emit, smoke=args.smoke, draft=args.draft)
     if args.json:
         write_json(results, args.json)
         print(f"# wrote {args.json}")

@@ -171,12 +171,17 @@ class PageAllocator:
             raise
         return list(self._tables[req])
 
-    def ensure(self, req: int, n_tokens: int) -> list[int]:
+    def ensure(self, req: int, n_tokens: int, *,
+               reclaim: bool = True) -> list[int]:
         """Lazy growth: make sure the request can hold n_tokens; returns any
         newly allocated pages (usually 0 or 1 per decode step). Shrink-safe:
         asking for fewer tokens than already covered is a no-op (pages are
         only released by ``free``), and non-positive token counts are treated
-        as the minimum footprint."""
+        as the minimum footprint. ``reclaim=False`` grows from the free
+        lists only — a MemoryError then means "would have to evict cached
+        pages", letting gentle horizon reservation degrade instead of
+        churning the radix cache (committed per-token growth still
+        reclaims)."""
         need = self._pages_for(n_tokens)
         have = len(self._tables[req])
         if self.static_max_pages is not None and need > have:
@@ -184,7 +189,7 @@ class PageAllocator:
                 f"req {req} exceeded static reservation ({need} > {have})")
         if need <= have:
             return []
-        return self._grow(req, need - have)
+        return self._grow(req, need - have, reclaim=reclaim)
 
     def _pop_page(self, req: int) -> int | None:
         """One page off the free lists, honoring placement policy; None when
@@ -204,11 +209,12 @@ class PageAllocator:
                 return page
         return None
 
-    def _grow(self, req: int, count: int) -> list[int]:
+    def _grow(self, req: int, count: int, *,
+              reclaim: bool = True) -> list[int]:
         new = []
         for _ in range(count):
             page = self._pop_page(req)
-            if page is None and self.reclaimer is not None:
+            if page is None and reclaim and self.reclaimer is not None:
                 # pool exhausted: ask the cache to evict/offload cold pages,
                 # then retry (the paper's DPA never stalls on static waste;
                 # here the capacity tier absorbs the overflow instead)

@@ -230,7 +230,8 @@ class ContinuousBatcher:
         self.dirty.add(s)
         return True
 
-    def reserve_horizon(self, active, k: int) -> np.ndarray:
+    def reserve_horizon(self, active, k: int, *,
+                        gentle: bool = False) -> np.ndarray:
         """Best-effort page reservation for a fused ``k``-step decode
         horizon. ``step()`` already covered each active slot's next token;
         this grows the allocation to cover up to ``k`` consecutive tokens
@@ -240,8 +241,14 @@ class ContinuousBatcher:
         guard). On pool exhaustion a slot's allowance degrades to whatever
         its pages already cover instead of preempting: the device mask
         pauses it mid-horizon and the next tick resumes it, so reservation
-        pressure never changes outputs. Returns ``allow`` [n_slots] int32 —
-        decode steps each slot may run this horizon (0 = not active)."""
+        pressure never changes outputs. ``gentle=True`` additionally
+        declines to evict radix-cached pages for SPECULATIVE growth (the
+        horizon beyond the committed next token): under sharing-heavy load
+        an aggressive k-token reservation would churn the prefix cache
+        every tick for tokens that may never be accepted, so the horizon
+        degrades first and only committed per-token growth reclaims.
+        Returns ``allow`` [n_slots] int32 — decode steps each slot may run
+        this horizon (0 = not active)."""
         allow = np.zeros((self.n_slots,), np.int32)
         for s in active:
             req = self.slots[s]
@@ -250,7 +257,8 @@ class ContinuousBatcher:
             want = min(req.total_len + steps - 1, self.max_context)
             if steps > 1 and want > req.total_len:
                 try:
-                    self._snap_grow(s, self.alloc.ensure(req.req_id, want))
+                    self._snap_grow(s, self.alloc.ensure(
+                        req.req_id, want, reclaim=not gentle))
                 except MemoryError:
                     covered = int(self._npages[s]) * self.alloc.page_size
                     steps = max(1, min(steps, covered - req.total_len + 1))

@@ -39,8 +39,9 @@ from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssm_scan import ssm_chunk_scan
 
 __all__ = ["KernelConfig", "DEFAULT_KERNELS", "decode_attention",
-           "paged_decode_step", "write_targets", "itpp_partials",
-           "attention_fwd", "mamba_mixer", "merge_partials"]
+           "verify_attention", "paged_decode_step", "write_targets",
+           "itpp_partials", "attention_fwd", "mamba_mixer",
+           "merge_partials"]
 
 
 def _resolve(use_pallas: bool | None) -> bool:
@@ -80,6 +81,29 @@ def decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                                n_splits=n_splits, interpret=interpret)
     return REF.paged_attention_ref(q, k_pages, v_pages, block_tables,
                                    ctx_lens).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "n_splits"))
+def verify_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                     window=None, use_pallas: bool | None = None,
+                     interpret: bool | None = None, n_splits: int = 1):
+    """Speculative-verify multi-query attention over the decode table.
+
+    q [B, KVH, G, T, D] — T consecutive query positions per slot (pending
+    token + draft proposals), query t at position ``ctx - 1 + t``; ctx_lens
+    counts tokens INCLUDING the first query token. One split-K pool pass
+    scores all T rows (``paged_attention.paged_attention_verify``); the
+    reference fallback is the gather-then-dense oracle. Returns
+    [B, KVH, G, T, D] in q.dtype.
+    """
+    from repro.kernels.paged_attention import paged_attention_verify
+    if _resolve(use_pallas):
+        return paged_attention_verify(q, k_pages, v_pages, block_tables,
+                                      ctx_lens, window=window,
+                                      n_splits=n_splits, interpret=interpret)
+    return REF.paged_attention_verify_ref(
+        q, k_pages, v_pages, block_tables, ctx_lens,
+        window=window).astype(q.dtype)
 
 
 @partial(jax.jit, static_argnames=("ring_width", "cond_window", "kernels"))

@@ -62,7 +62,7 @@ def _partials_kernel(bt_ref, ctx_ref, w_ref,         # scalar prefetch
                      o_ref, l_ref, m_ref,            # per-split partials
                      m_s, l_s, acc_s,                # scratch
                      *, page: int, slots_per_split: int, ring_width: int,
-                     windowed_slice: bool):
+                     windowed_slice: bool, qpos: int = 1):
     s = pl.program_id(0)
     b = pl.program_id(1)
     j = pl.program_id(3)
@@ -86,21 +86,30 @@ def _partials_kernel(bt_ref, ctx_ref, w_ref,         # scalar prefetch
         vp = slot
     lo_tok = jnp.where(w > 0, ctx - w, 0)
     pid = bt_ref[b, slot]
-    # context-adaptive early-out: dead pages cost neither FLOPs nor scratch
-    live = ((pid >= 0) & (vp >= 0) & (vp * page < ctx)
+    # context-adaptive early-out: dead pages cost neither FLOPs nor scratch.
+    # qpos > 1 (multi-query verify): the deepest query row sees qpos-1 extra
+    # tokens, so the liveness bound widens by that much — per-row masking
+    # below keeps shallower rows exact.
+    live = ((pid >= 0) & (vp >= 0) & (vp * page < ctx + qpos - 1)
             & ((vp + 1) * page > lo_tok))
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)                # [G, D]
+        q = q_ref[0, 0].astype(jnp.float32)                # [G*qpos, D]
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # [page, D]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         d = q.shape[-1]
+        rows = q.shape[0]
         sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        sc = sc / jnp.sqrt(jnp.float32(d))                 # [G, page]
+        sc = sc / jnp.sqrt(jnp.float32(d))                 # [G*qpos, page]
         tok = vp * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-        ok = (tok < ctx) & (tok >= lo_tok)
+        # row r of the q tile is query position ctx-1 + (r % qpos): its
+        # effective context is ctx + r%qpos and its window slides with it
+        t_row = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) % qpos
+        hi = ctx + t_row                                   # [rows, 1]
+        lo = jnp.where(w > 0, hi - w, 0)
+        ok = (tok < hi) & (tok >= lo)
         sc = jnp.where(ok, sc, NEG_INF)
         m_prev = m_s[...]
         m_new = jnp.maximum(m_prev, sc.max(axis=1))        # [G]
@@ -121,7 +130,7 @@ def _partials_kernel(bt_ref, ctx_ref, w_ref,         # scalar prefetch
 def paged_attention_partials(q, k_pages, v_pages, block_tables, ctx_lens, *,
                              window=None, ring_width: int = 0,
                              windowed_slice: bool = False, n_splits: int = 1,
-                             interpret: bool | None = None):
+                             qpos: int = 1, interpret: bool | None = None):
     """Split-K decode-attention partials over a paged pool.
 
     q [B, KVH, G, D]; k_pages/v_pages [P, page, KVH, D];
@@ -129,12 +138,17 @@ def paged_attention_partials(q, k_pages, v_pages, block_tables, ctx_lens, *,
     (pad / unowned shard-locally / out of window); ctx_lens [B] int32 tokens
     INCLUDING the current one; ``window`` traced [B] or scalar (0 = full);
     ``ring_width``/``windowed_slice`` per the module docstring (mutually
-    exclusive). Returns fp32 UNNORMALIZED partials
-    (o [S, B, KVH, G, D], l [S, B, KVH, G], m [S, B, KVH, G]) for the
-    stable EPU merge (``ref.combine_partials`` locally, ``pl`` collectives
-    across shards).
+    exclusive). ``qpos > 1`` is the speculative-verify multi-query mode: the
+    q axis ``G`` is read as ``G_real * qpos`` consecutive query rows, row
+    ``r`` attending at position ``ctx - 1 + r % qpos`` (ctx_lens still counts
+    tokens INCLUDING the FIRST query row's token). Returns fp32 UNNORMALIZED
+    partials (o [S, B, KVH, G, D], l [S, B, KVH, G], m [S, B, KVH, G]) for
+    the stable EPU merge (``ref.combine_partials`` locally, ``pl``
+    collectives across shards).
     """
     assert not (ring_width and windowed_slice)
+    assert qpos == 1 or not (ring_width or windowed_slice), \
+        "multi-query verify runs on plain paged tables only"
     assert not (windowed_slice and window is None), \
         "windowed_slice slot mapping is defined by the window bound"
     B, KVH, G, D = q.shape
@@ -174,7 +188,7 @@ def paged_attention_partials(q, k_pages, v_pages, block_tables, ctx_lens, *,
 
     kernel = functools.partial(_partials_kernel, page=page,
                                slots_per_split=K, ring_width=ring_width,
-                               windowed_slice=windowed_slice)
+                               windowed_slice=windowed_slice, qpos=qpos)
     return pl.pallas_call(
         kernel,
         compiler_params=pltpu.TPUCompilerParams(
@@ -222,3 +236,28 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
         ring_width=ring_width, n_splits=n_splits, interpret=interpret)
     o, l, _ = combine_partials(o, l, m)
     return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def paged_attention_verify(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                           window=None, n_splits: int = 1,
+                           interpret: bool | None = None):
+    """Multi-query verify attention for speculative decode (normalized).
+
+    q [B, KVH, G, T, D] — ``T`` consecutive query positions per slot (the
+    pending token + the draft proposals), position of query t being
+    ``ctx - 1 + t``; k_pages/v_pages [P, page, KVH, D]; block_tables
+    [B, maxp] int32 (-1 padded); ctx_lens [B] int32 context INCLUDING the
+    FIRST query token. The T axis folds into the kernel's q-row axis
+    (``qpos``) so the same split-K page stream serves all T rows — one pool
+    pass verifies the whole proposal window. Returns [B, KVH, G, T, D] in
+    q.dtype.
+    """
+    from repro.kernels.ref import combine_partials
+    B, KVH, G, T, D = q.shape
+    o, l, m = paged_attention_partials(
+        q.reshape(B, KVH, G * T, D), k_pages, v_pages, block_tables,
+        ctx_lens, window=window, n_splits=n_splits, qpos=T,
+        interpret=interpret)
+    o, l, _ = combine_partials(o, l, m)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, KVH, G, T, D).astype(q.dtype)

@@ -29,6 +29,35 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens):
     return jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
 
 
+def paged_attention_verify_ref(q, k_pages, v_pages, block_tables, ctx_lens,
+                               window=None):
+    """Multi-query verify attention over a paged pool (speculative decode).
+
+    q [B, KVH, G, T, D] — T consecutive query positions per slot, query t
+    sitting at position ``ctx - 1 + t``; ctx_lens [B] counts tokens
+    INCLUDING the first query token, so query t attends to tok < ctx + t
+    (and >= ctx + t - window when windowed). Returns [B, KVH, G, T, D] fp32.
+    """
+    B, KVH, G, T, D = q.shape
+    maxp = block_tables.shape[1]
+    page = k_pages.shape[1]
+    safe = jnp.maximum(block_tables, 0)
+    k = k_pages[safe].reshape(B, maxp * page, KVH, D)
+    v = v_pages[safe].reshape(B, maxp * page, KVH, D)
+    s = jnp.einsum("bkgqd,btkd->bkgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    tok = jnp.arange(maxp * page)[None, None]             # [1, 1, P*page]
+    hi = ctx_lens[:, None, None] + jnp.arange(T)[None, :, None]
+    ok = tok < hi                                         # [B, T, P*page]
+    if window is not None:
+        w = jnp.broadcast_to(jnp.asarray(window, jnp.int32).reshape(-1),
+                             (B,))[:, None, None]
+        ok = ok & jnp.where(w > 0, tok >= hi - w, True)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqt,btkd->bkgqd", p, v.astype(jnp.float32))
+
+
 def flash_decode_ref(q, k, v, ctx_len, n_splits: int):
     """ITPP split-K decode partials oracle.
 

@@ -37,6 +37,13 @@ from repro.serving import DecodeEngine, EngineConfig
 
 def build_engine(args) -> DecodeEngine:
     cfg = replace(reduced(get_config(args.arch)), dtype="float32")
+    draft_cfg = None
+    if args.draft:
+        # reduced() drafts share the reduced target's 256-token vocab, so
+        # any attention-only arch pairs with any other; full-size cross-arch
+        # pairs are vetted by validate_draft_pair at engine construction
+        draft_cfg = replace(reduced(get_config(args.draft), layers=1),
+                            dtype="float32")
     ecfg = EngineConfig(n_slots=args.slots, page_size=args.page,
                         n_pages=args.pages, max_context=args.max_context,
                         static_alloc=args.static, eos_token=-1,
@@ -50,6 +57,9 @@ def build_engine(args) -> DecodeEngine:
                         kernel_splits=args.kernel_splits,
                         decode_bucket=not args.no_decode_bucket,
                         decode_horizon=args.decode_horizon,
+                        draft_config=draft_cfg,
+                        spec_horizon=args.spec_horizon,
+                        reserve_gentle=args.reserve_gentle,
                         state_resume=not args.no_state_resume)
     return DecodeEngine(cfg, ecfg)
 
@@ -120,6 +130,17 @@ def main(argv=None):
                     default=ParallelConfig().decode_horizon,
                     help="fused decode steps per engine tick (one jit, one "
                          "host sync per horizon); 1 = per-token dispatch")
+    ap.add_argument("--draft", default="",
+                    help="speculative decoding: arch name for a 1-layer "
+                         "reduced draft model proposing tokens the target "
+                         "verifies in one multi-query pass (greedy outputs "
+                         "stay token-identical)")
+    ap.add_argument("--spec-horizon", type=int, default=4,
+                    help="max draft proposals per slot per tick (emits up "
+                         "to spec-horizon+1 tokens per sync)")
+    ap.add_argument("--reserve-gentle", action="store_true",
+                    help="horizon reservation declines to evict radix-"
+                         "cached pages, degrading the horizon instead")
     args = ap.parse_args(argv)
 
     eng = build_engine(args)
@@ -145,6 +166,11 @@ def main(argv=None):
     if eng.has_rstate:
         print(f"[serve] rstate: snapshots={eng.rstate_snapshots} "
               f"restores={eng.rstate_restores}", flush=True)
+    if eng.draft_cfg is not None:
+        acc = 1 + eng.spec_accepted / max(1, eng.spec_rounds)
+        print(f"[serve] spec: draft={args.draft} rounds={eng.spec_rounds} "
+              f"accepted={eng.spec_accepted}/{eng.spec_proposed} "
+              f"accept_len_mean={acc:.2f}", flush=True)
     if eng.cache is not None:
         cs = eng.cache.stats_dict()
         print(f"[serve] kvcache: hits={cs['hits']}/{cs['lookups']} "

@@ -658,6 +658,164 @@ def decode_multi(cfg, params, state, tokens, bt, ctx, rem, allow, key, *,
 
 
 # ---------------------------------------------------------------------------
+# speculative decode: draft-propose + one-pass multi-query verify
+# ---------------------------------------------------------------------------
+
+def draft_propose(cfg, params, state, tokens, bt, ctx, allow, key, *,
+                  horizon: int, table_width: int, page_size: int,
+                  n_pages: int, sample, need_q: bool,
+                  rt: Runtime = DEFAULT_RT):
+    """Draft side of a speculative round: up to ``horizon`` masked decode
+    steps proposing the next tokens for every slot at once.
+
+    The draft shares the TARGET's block tables and page ids — its (smaller)
+    pool is indexed by the same Va2Pa, so draft KV at any page/offset is a
+    pure function of (token prefix, position) and radix-shared pages stay
+    coherent across requests. ``tokens``/``ctx`` are the target's
+    device-resident slot state (ctx INCLUDING the pending token, whose
+    draft KV is written by step 0 at position ctx-1); ``allow`` is the
+    horizon reservation — step ``i`` runs where ``i < clip(allow-1, 0,
+    horizon)``, so a slot reserved for a single token proposes nothing and
+    the verify pass degrades to plain decode for it.
+
+    ``sample``: scan-sampler ``(key, logits) -> tokens`` (the engine's
+    kind, so the proposal distribution q matches what the verifier
+    assumes). ``need_q``: stack the raw per-step logits for residual
+    rejection sampling (stochastic kinds only — greedy needs tokens alone).
+    Returns ``(proposals [B, horizon], qlogits [horizon, B, V] | None,
+    state, key)``; proposals/ctx/tokens of masked slots are untouched
+    garbage the verifier masks out via its own ``allow``.
+    """
+    from repro.kernels.ops import write_targets
+    W = bt.shape[1]
+    bt_attn = bt[:, :table_width] if table_width < W else bt
+    nprop = jnp.clip(allow - 1, 0, horizon)
+
+    def body(carry, i):
+        tokens, ctx, state, key = carry
+        run = i < nprop
+        npage, noff = write_targets(bt, ctx, run, page_size=page_size,
+                                    n_pages=n_pages,
+                                    ring_width=rt.ring_width)
+        logits, state = decode_step(cfg, params, state, tokens, bt_attn,
+                                    ctx, npage, noff, run=run, rt=rt)
+        key, sub = jax.random.split(key)
+        nxt = sample(sub, logits)
+        tokens = jnp.where(run, nxt, tokens)
+        ctx = jnp.where(run, ctx + 1, ctx)
+        return (tokens, ctx, state, key), \
+            ((nxt, logits) if need_q else nxt)
+
+    carry = (tokens, ctx, state, key)
+    (_, _, state, key), ys = jax.lax.scan(body, carry, jnp.arange(horizon))
+    toks, qlogits = ys if need_q else (ys, None)
+    return toks.T, qlogits, state, key
+
+
+def decode_verify(cfg, params, state, tokens, proposals, qlogits, bt, ctx,
+                  rem, allow, key, *, horizon: int, table_width: int,
+                  page_size: int, n_pages: int, eos_token: int, verifier,
+                  rt: Runtime = DEFAULT_RT):
+    """One-pass speculative verify: score the pending token plus the
+    draft's ``horizon`` proposals in a single multi-query target forward,
+    accept a prefix, and advance the device slot state exactly as
+    ``decode_multi`` would have.
+
+    The round forwards ``[pending, d_1..d_G]`` at positions ctx-1..ctx+G-1
+    (uniform attention stacks only — recurrent carries cannot roll back
+    past rejected tokens). Every row's K/V lands via the multi-token
+    ``write_prefill(ctx_start=ctx-1, valid_len=nprop+1)`` route — frozen /
+    idle slots get valid_len 0 so their scatter drops, exactly like frozen
+    slots in the fused scan — then ``kernels.ops.verify_attention`` scores
+    all G+1 query rows against the paged pool in one split-K pass (query
+    row t masked to tok < ctx+t, so the causal frontier advances inside the
+    round). Rollback is free: rejected positions' KV is dead beyond the new
+    ctx (attention masks it) and the next round's writes start at the new
+    ctx-1, overwriting the first stale row before it can ever be read.
+
+    ``verifier`` (serving.sampling.make_verifier) turns (logits, qlogits,
+    proposals) into ``(candidates [B, G+1], accept_len [B])`` — greedy
+    longest-matching-prefix (token-identical to target-only decoding) or
+    stochastic residual rejection sampling. The emitted run is
+    ``candidates[:e]`` with ``e = accept_len+1`` truncated at the first
+    EOS/budget stop, replicating ``decode_multi``'s freeze semantics
+    (finished slots do not advance past their final token).
+
+    Returns ``(toks [G+1, B], emit [G+1, B] bool, finished [B], state,
+    tokens, ctx, rem, key, accept_len [B])`` — decode_multi's contract plus
+    the accept counter, so the engine folds spec rounds and plain horizons
+    identically.
+    """
+    from repro.core.paged_kv import write_prefill
+    from repro.kernels.ops import verify_attention
+    B = tokens.shape[0]
+    C = horizon + 1
+    run = allow > 0
+    nprop = jnp.clip(allow - 1, 0, horizon)
+    seq = jnp.concatenate([tokens[:, None], proposals], axis=1)   # [B, C]
+    start = jnp.maximum(ctx - 1, 0).astype(jnp.int32)
+    valid_len = jnp.where(run, nprop + 1, 0)
+    W = bt.shape[1]
+    bt_attn = bt[:, :table_width] if table_width < W else bt
+    kc = rt.kernels
+
+    x = L.embed(params["embed"], seq)
+    x = rt.constrain(x, "act")
+    positions = default_positions(cfg, B, C, offset=start[:, None])
+    cs = _cos_sin(cfg, positions)
+    state = dict(state)
+    windows = jnp.asarray(_window_array(cfg))
+    pool = state["pool"]
+
+    def block(h, xs):
+        lp, w, pkl, pvl = xs
+        hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], cfg, hn)      # [B, C, H, dh]
+        if cs is not None:
+            q = L.apply_rope(q, *cs)
+            k = L.apply_rope(k, *cs)
+        pkl, pvl = write_prefill(pkl, pvl, k, v, bt, ctx_start=start,
+                                 valid_len=valid_len)
+        grp = cfg.n_heads // cfg.n_kv_heads
+        qr = q.transpose(0, 2, 1, 3).reshape(
+            B, cfg.n_kv_heads, grp, C, cfg.d_head)
+        a = verify_attention(
+            qr, pkl, pvl, bt_attn, ctx, window=w,
+            use_pallas=False if kc is None else kc.use_pallas,
+            interpret=None if kc is None else kc.interpret,
+            n_splits=1 if kc is None else kc.n_splits)
+        a = a.transpose(0, 3, 1, 2, 4).reshape(B, C, cfg.q_dim)
+        h = h + L.dense(a, lp["attn"]["wo"])
+        return _prefill_block_tail(lp, cfg, h, None, rt), (pkl, pvl)
+
+    x, (pk, pv) = jax.lax.scan(
+        block, x, (params["layers"], windows, pool["k"], pool["v"]))
+    state["pool"] = {"k": pk, "v": pv}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w_out = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = L.lm_head(x, w_out, transpose=cfg.tie_embeddings)    # [B, C, V]
+
+    key, cand, acc = verifier(key, logits, qlogits, proposals, nprop, run)
+    # EOS / budget truncation over the accepted run, replicating the fused
+    # scan's per-step freeze: candidate j is EOS or spends the budget ->
+    # emit exactly j+1 tokens and finish without advancing past them
+    idx = jnp.arange(C)
+    stop = (cand == eos_token) | (rem[:, None] - (idx + 1)[None] <= 0)
+    stopped = (idx[None] <= acc[:, None]) & stop & run[:, None]
+    any_stop = stopped.any(axis=1)
+    e = jnp.where(any_stop, jnp.argmax(stopped, axis=1) + 1, acc + 1)
+    e = jnp.where(run, e, 0).astype(jnp.int32)
+    emit = idx[None] < e[:, None]                                 # [B, C]
+    fin = run & any_stop
+    newtok = cand[jnp.arange(B), jnp.maximum(e - 1, 0)]
+    tokens = jnp.where(run, newtok, tokens)
+    rem = jnp.where(run, rem - e, rem)
+    ctx = jnp.where(run, ctx + e - fin.astype(jnp.int32), ctx)
+    return (cand.T, emit.T, fin, state, tokens, ctx, rem, key,
+            jnp.where(run, acc, 0).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
 # prefill: full-sequence forward that also fills the decode caches
 # ---------------------------------------------------------------------------
 

@@ -12,7 +12,7 @@ from repro.serving.prefill import (BatchedPrefiller, ChunkedPrefiller,
                                    SlotPrefiller, make_prefiller)
 from repro.serving.sampling import (Sampler, greedy_sample,
                                     make_callback_sampler, make_sampler,
-                                    make_scan_sampler)
+                                    make_scan_sampler, make_verifier)
 
 __all__ = [
     "DecodeEngine", "EngineConfig", "EngineTiming",
@@ -20,5 +20,5 @@ __all__ = [
     "make_policy",
     "SlotPrefiller", "BatchedPrefiller", "ChunkedPrefiller", "make_prefiller",
     "Sampler", "greedy_sample", "make_callback_sampler", "make_sampler",
-    "make_scan_sampler",
+    "make_scan_sampler", "make_verifier",
 ]

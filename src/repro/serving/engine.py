@@ -87,6 +87,24 @@ class EngineConfig:
     # while chunked prefill is streaming so the DCS interleave granularity
     # (one chunk between consecutive decode steps) is preserved.
     decode_horizon: int = 1
+    # ---- speculative decoding (draft-propose, one-pass verify) ----
+    # a small draft config (name or ModelConfig) proposes up to spec_horizon
+    # tokens per slot per tick via its own fused scan and (smaller) paged KV
+    # pool — indexed by the TARGET's block tables, so no second allocator —
+    # and ONE multi-query target pass verifies them all (greedy acceptance
+    # is token-identical to target-only decoding; stochastic uses residual
+    # rejection sampling, distribution-exact). Supersedes decode_horizon on
+    # the fused path: each tick still costs one host sync but can emit up
+    # to spec_horizon + 1 tokens per slot. Attention-only stacks on both
+    # sides (configs.base.validate_draft_pair enforces tokenizer compat and
+    # rollback-ability at construction).
+    draft_config: Any = None
+    spec_horizon: int = 4
+    # gentle horizon reservation: decline to evict radix-cached pages for
+    # speculative (beyond-next-token) growth, degrading the horizon instead
+    # — sharing-heavy load keeps its prefix cache, at worst costing horizon
+    # depth, never correctness (committed per-token growth still reclaims)
+    reserve_gentle: bool = False
     # ---- KV-cache hierarchy (repro.kvcache) ----
     prefix_cache: bool = False        # radix prefix sharing across requests
     prefill_dedup: bool = True        # same-tick prefix dedup at admission
@@ -178,7 +196,8 @@ class DeviceSlotState:
 
 class DecodeEngine:
     def __init__(self, cfg, ecfg: EngineConfig, params=None, rt=None,
-                 *, sample: Callable | None = None, policy=None):
+                 *, sample: Callable | None = None, policy=None,
+                 draft_params=None):
         self.cfg = cfg
         self.ecfg = ecfg
         if rt is None:
@@ -188,6 +207,28 @@ class DecodeEngine:
                 interpret=ecfg.kernel_interpret,
                 n_splits=ecfg.kernel_splits))
         self.rt = rt
+        # draft/target compat is validated BEFORE any params are allocated:
+        # a tokenizer (vocab) mismatch must fail here, loudly, not as a
+        # shape error inside the compiled verify pass
+        self.draft_cfg = None
+        if ecfg.draft_config is not None:
+            from repro.configs.base import validate_draft_pair
+            dcfg = ecfg.draft_config
+            if isinstance(dcfg, str):
+                from repro.configs import get_config
+                dcfg = get_config(dcfg)
+            validate_draft_pair(cfg, dcfg)
+            if rt.ring_width or rt.write_pool is not None:
+                raise ValueError(
+                    "speculative decode rides the fused batchable path; "
+                    "ring-buffer / sharded-writer runtimes are per-slot")
+            if sample is not None:
+                raise ValueError(
+                    "speculative decode needs the jitted sampler kinds "
+                    "(greedy/temperature/top_k) so the draft's proposal "
+                    "distribution is known to the verifier; legacy per-row "
+                    "sample= callables cannot be verified against")
+            self.draft_cfg = dcfg
         self.params = params if params is not None else MDL.init_params(
             cfg, jax.random.PRNGKey(0), jnp.float32)
         kinds = cfg.block_kinds()
@@ -274,12 +315,46 @@ class DecodeEngine:
                                    self.pool_spec.max_pages_per_req,
                                    ecfg.sample_seed, self._donate)
         self._fused_jit = None
-        # in-flight horizon: (toks, emit, fin, [(slot, req)]) — device
-        # futures; collected at the next tick's sync point
+        # in-flight horizon: (toks, emit, fin, [(slot, req)], spec) — device
+        # futures; collected at the next tick's sync point. ``spec`` is None
+        # on plain horizons, (accept_len_device, nprop_host) on speculative
+        # ones.
         self._inflight: tuple | None = None
         # finished mask collected by a drain outside the tick loop, consumed
         # by the next tick's scheduler call
         self._pending_fin: np.ndarray | None = None
+        # snapshots taken as DEVICE futures at preempt time, drained to host
+        # numpy in the next tick's overlap window (kvcache ping-pong style)
+        self._snap_pending: list[int] = []
+        # ---- speculative-decode machinery ----
+        self.draft_params = None
+        self._dstate = None
+        if self.draft_cfg is not None:
+            dcfg = self.draft_cfg
+            # the draft pool is indexed by the TARGET's block tables — same
+            # page ids, smaller per-page payload (draft layers/heads), no
+            # second allocator. Draft KV at (page, offset) is a pure
+            # function of the token prefix at that position, so pages
+            # shared by the radix cache stay coherent: every borrower
+            # recomputes bit-identical rows.
+            self.draft_spec = PoolSpec(
+                dcfg.n_layers, ecfg.n_pages, ecfg.page_size, dcfg.n_kv_heads,
+                dcfg.d_head, maxp, dtype="float32")
+            self.draft_params = draft_params if draft_params is not None \
+                else MDL.init_params(dcfg, jax.random.PRNGKey(1), jnp.float32)
+            self._dstate = MDL.init_decode_state(
+                dcfg, self.draft_spec, ecfg.n_slots, dtype="float32")
+            self._dkey = jax.random.PRNGKey(ecfg.sample_seed + 1)
+            # req_id -> tokens the draft pool has absorbed (its KV covers
+            # positions [0, dlen)); reset to 0 at every (re)admission —
+            # swap-ins, CoW copies and preemption resumes only restore the
+            # TARGET's pages, so the draft catches up by recomputing
+            self._dlen: dict[int, int] = {}
+            self._spec_jits = None
+            self._catchup_jit = None
+            self.spec_rounds = 0        # verify passes over running slots
+            self.spec_proposed = 0      # draft tokens offered
+            self.spec_accepted = 0      # draft tokens accepted
 
     # ------------------------------------------------------------------
     def submit(self, req_id: int, prompt: np.ndarray,
@@ -380,18 +455,39 @@ class DecodeEngine:
         depth = req.total_len - (1 if req.generated else 0)
         if depth <= 0:
             return
+        # the gathers are DISPATCHED here (they must read the pool before
+        # the released pages are rewritten — device-stream order guarantees
+        # that) but NOT synced: the device arrays park in the snapshot and
+        # the host copy happens in the next tick's overlap window
+        # (_drain_snapshots), so snapshot latency hides under decode exactly
+        # like the kvcache swap-out ping-pong. A restore that arrives
+        # before the drain consumes the device arrays directly.
         snap = {"len": depth,
-                "rows": jax.tree.map(np.asarray,
-                                     MDL.gather_rstate(self.state, [slot]))}
+                "rows": MDL.gather_rstate(self.state, [slot])}
         if "pool" in self.state:
             from repro.core.paged_kv import gather_pages
             n = -(-depth // self.ecfg.page_size)
             pages = np.asarray(self.batcher.block_table_row(slot)[:n])
             k, v = gather_pages(self.state["pool"]["k"],
                                 self.state["pool"]["v"], jnp.asarray(pages))
-            snap["kv"] = (np.asarray(k), np.asarray(v))
+            snap["kv"] = (k, v)
         self.rsnaps[req.req_id] = snap
+        self._snap_pending.append(req.req_id)
         self.rstate_snapshots += 1
+
+    def _drain_snapshots(self) -> None:
+        """Materialize pending preemption snapshots to host numpy (the
+        drain half of the snapshot ping-pong). Snapshots restored before
+        their drain were consumed as device arrays and are gone from
+        ``rsnaps`` — skip them."""
+        for rid in self._snap_pending:
+            snap = self.rsnaps.get(rid)
+            if snap is None:
+                continue
+            snap["rows"] = jax.tree.map(np.asarray, snap["rows"])
+            if "kv" in snap:
+                snap["kv"] = tuple(np.asarray(x) for x in snap["kv"])
+        self._snap_pending.clear()
 
     def _take_snapshot(self, req) -> dict | None:
         if not self.ecfg.state_resume:
@@ -490,6 +586,7 @@ class DecodeEngine:
         returned mask is also stashed for a later ``run()``."""
         E = self.ecfg
         t0 = time.perf_counter()
+        self._drain_snapshots()
         if self._pending_fin is not None:
             finished_mask = self._pending_fin if finished_mask is None \
                 else (np.asarray(finished_mask, bool) | self._pending_fin)
@@ -607,6 +704,120 @@ class DecodeEngine:
         return jax.jit(fn, static_argnames=("horizon", "width"),
                        donate_argnums=donate)
 
+    # ---- speculative decode: propose / catch-up / verify ----------------
+    def _make_spec(self):
+        """Compile the speculative pair: the draft's proposal scan and the
+        target's one-pass multi-query verify. Argument donation mirrors the
+        fused scan but is split across the two dispatches: propose may only
+        donate the draft state and key (tokens/ctx are re-read by verify);
+        verify donates everything it replaces. Single-stream execution
+        order (propose enqueued first) makes the verify-side aliasing of
+        shared inputs safe."""
+        from repro.serving.sampling import make_verifier
+        E, rt = self.ecfg, self.rt
+        dcfg = self.draft_cfg
+        sample = make_scan_sampler(E.sampler, temperature=E.temperature,
+                                   top_k=E.top_k)
+        verifier = make_verifier(E.sampler, temperature=E.temperature,
+                                 top_k=E.top_k)
+        need_q = E.sampler != "greedy"
+
+        def propose(dparams, dstate, tokens, bt, ctx, allow, dkey, *,
+                    horizon, width):
+            return MDL.draft_propose(
+                dcfg, dparams, dstate, tokens, bt, ctx, allow, dkey,
+                horizon=horizon, table_width=width, page_size=E.page_size,
+                n_pages=E.n_pages, sample=sample, need_q=need_q, rt=rt)
+
+        def verify(params, state, tokens, proposals, qlogits, bt, ctx, rem,
+                   allow, key, *, horizon, width):
+            return MDL.decode_verify(
+                self.cfg, params, state, tokens, proposals, qlogits, bt,
+                ctx, rem, allow, key, horizon=horizon, table_width=width,
+                page_size=E.page_size, n_pages=E.n_pages,
+                eos_token=E.eos_token, verifier=verifier, rt=rt)
+
+        dp = (1, 6) if self._donate else ()
+        dv = (1, 2, 4, 6, 7, 9) if self._donate else ()
+        return (jax.jit(propose, static_argnames=("horizon", "width"),
+                        donate_argnums=dp),
+                jax.jit(verify, static_argnames=("horizon", "width"),
+                        donate_argnums=dv))
+
+    def _draft_catchup(self, active) -> None:
+        """Bring the draft pool level with the target before proposing:
+        batched draft prefill of every active slot's tokens in
+        ``[dlen, ctx-1)`` (positions the draft has not absorbed — fresh
+        admissions, preemption resumes, prefix-cache hits and post-swap-in
+        pages all land here because (re)admission resets dlen to 0; steady
+        state needs nothing or one token after a partially-accepted round).
+        One async dispatch, shapes bucketed like ``prefill_suffix``."""
+        from repro.serving.prefill import _make_chunk_fn, _suffix_bucket
+        E = self.ecfg
+        ctx = self.batcher.context_lens()
+        needy, needs = [], []
+        for s in active:
+            req = self.batcher.slots[s]
+            dlen = self._dlen.get(req.req_id, 0)
+            need = int(ctx[s]) - 1 - dlen
+            if need > 0:
+                needy.append((s, req, dlen))
+                needs.append(need)
+        if not needy:
+            return
+        if self._catchup_jit is None:
+            self._catchup_jit = _make_chunk_fn(self.draft_cfg, self.rt)
+        blen = _suffix_bucket(max(needs), max(E.max_prefill, E.page_size))
+        rows = 1
+        while rows < len(needy):
+            rows *= 2
+        toks = np.zeros((rows, blen), np.int32)
+        starts = np.zeros((rows,), np.int32)
+        lens = np.zeros((rows,), np.int32)
+        bt_rows = np.zeros((rows, self.pool_spec.max_pages_per_req),
+                           np.int32)
+        W = self.pool_spec.max_pages_per_req
+        host_bt = self.batcher.block_tables(W)
+        for i, ((s, req, dlen), need) in enumerate(zip(needy, needs)):
+            full = np.concatenate(
+                [self.prompts[req.req_id],
+                 np.asarray(self.outputs[req.req_id], np.int32)])
+            toks[i, :need] = full[dlen:dlen + need]
+            starts[i] = dlen
+            lens[i] = need
+            bt_rows[i] = host_bt[s]
+            self._dlen[req.req_id] = dlen + need
+        # pad rows repeat the last real row with valid_len 0 — their pool
+        # writes drop, exactly like group-prefill end padding
+        for i in range(len(needy), rows):
+            bt_rows[i] = bt_rows[len(needy) - 1]
+        _, dstate = self._catchup_jit(
+            self.draft_params, {"pool": self._dstate["pool"]},
+            jnp.asarray(toks), jnp.asarray(bt_rows), jnp.asarray(starts),
+            jnp.asarray(np.maximum(lens - 1, 0)), jnp.asarray(lens))
+        self._dstate["pool"] = dstate["pool"]
+
+    def _dispatch_spec(self, active, allow, K: int, width: int) -> None:
+        """Dispatch one speculative round (draft scan + verify pass) without
+        blocking — the tick's single sync stays at next tick's collect."""
+        if self._spec_jits is None:
+            self._spec_jits = self._make_spec()
+        propose, verify = self._spec_jits
+        G = K - 1
+        allow_j = jnp.asarray(allow)
+        prop, qlog, self._dstate, self._dkey = propose(
+            self.draft_params, self._dstate, self.dev.tokens, self.dev.bt,
+            self.dev.ctx, allow_j, self._dkey, horizon=G, width=width)
+        toks, emit, fin, self.state, self.dev.tokens, self.dev.ctx, \
+            self.dev.rem, self.dev.key, acc = verify(
+                self.params, self.state, self.dev.tokens, prop, qlog,
+                self.dev.bt, self.dev.ctx, self.dev.rem, allow_j,
+                self.dev.key, horizon=G, width=width)
+        nprop = np.clip(allow - 1, 0, G).astype(np.int32)
+        self._inflight = (toks, emit, fin,
+                          [(s, self.batcher.slots[s]) for s in active],
+                          (acc, nprop))
+
     def _sync_device_slots(self) -> None:
         """Mirror the scheduler's dirty rows into the device-resident slot
         state — the incremental config-buffer update (rows touched by
@@ -633,10 +844,11 @@ class DecodeEngine:
         emissions into outputs / request bookkeeping."""
         if self._inflight is None:
             return None
-        toks, emit, fin, pairs = self._inflight
+        toks, emit, fin, pairs, spec = self._inflight
         self._inflight = None
         t0 = time.perf_counter()
         toks, emit, fin = np.asarray(toks), np.asarray(emit), np.asarray(fin)
+        acc = np.asarray(spec[0]) if spec is not None else None
         self.timing.decode_s += time.perf_counter() - t0
         self.timing.device_syncs += 1
         finished = np.zeros((self.ecfg.n_slots,), bool)
@@ -646,11 +858,24 @@ class DecodeEngine:
                 continue
             self.outputs[req.req_id].extend(int(t) for t in ts)
             self.first_tok_t.setdefault(req.req_id, time.perf_counter())
+            if spec is not None:
+                # draft-pool coverage after the round: the draft absorbed
+                # its proposals' KV up to the accepted/emitted frontier
+                # (req.total_len is still the dispatch-time context here —
+                # ``generated`` advances below)
+                nprop = int(spec[1][slot])
+                self._dlen[req.req_id] = req.total_len - 1 \
+                    + min(len(ts), nprop)
+                self.spec_rounds += 1
+                self.spec_proposed += nprop
+                self.spec_accepted += int(acc[slot])
             # the tick's step() already reserved one token; the rest of the
             # horizon's emissions land here
             req.generated += len(ts) - 1
             self.tokens[slot] = int(ts[-1])
             finished[slot] = bool(fin[slot])
+            if fin[slot] and self._dstate is not None:
+                self._dlen.pop(req.req_id, None)
             self.timing.decode_tokens += int(len(ts))
         return finished
 
@@ -668,6 +893,7 @@ class DecodeEngine:
         # ---- overlap window: result-independent host work --------------
         if self.cache is not None:
             self.cache.maintain()
+        self._drain_snapshots()
         if self._inflight is not None and self.batcher.queue:
             self.batcher.prefetch_peeks(limit=2 * E.n_slots)
         t1 = time.perf_counter()
@@ -696,30 +922,45 @@ class DecodeEngine:
 
         # ---- horizon reservation + incremental config update -----------
         t4 = time.perf_counter()
-        K = max(1, E.decode_horizon)
+        spec = self._dstate is not None
+        if spec:
+            # the draft must re-absorb any context it did not write —
+            # every (re)admission starts from zero (swap-in / CoW /
+            # snapshot restore only rebuild the target's pages)
+            for _s, req in admitted:
+                self._dlen[req.req_id] = 0
+            K = max(1, E.spec_horizon + 1)
+        else:
+            K = max(1, E.decode_horizon)
         cap = self.prefiller.max_horizon
         if cap is not None:
             K = min(K, cap)
-        allow = self.batcher.reserve_horizon(active, K)
+        allow = self.batcher.reserve_horizon(active, K,
+                                             gentle=E.reserve_gentle)
         self._sync_device_slots()
         W = self.pool_spec.max_pages_per_req
         width = W
         if E.decode_bucket and W > 16:
             from repro.serving.prefill import decode_table_bucket
             width = decode_table_bucket(self.batcher.max_live_pages(), W)
-        if self._fused_jit is None:
-            self._fused_jit = self._make_fused()
         self.timing.host_s += time.perf_counter() - t4
 
-        # ---- dispatch the fused scan; do NOT block ---------------------
+        # ---- dispatch; do NOT block ------------------------------------
         t5 = time.perf_counter()
-        toks, emit, fin, self.state, self.dev.tokens, self.dev.ctx, \
-            self.dev.rem, self.dev.key = self._fused_jit(
-                self.params, self.state, self.dev.tokens, self.dev.bt,
-                self.dev.ctx, self.dev.rem, jnp.asarray(allow), self.dev.key,
-                horizon=int(K), width=int(width))
-        self._inflight = (toks, emit, fin,
-                          [(s, self.batcher.slots[s]) for s in active])
+        if spec:
+            self._draft_catchup(active)
+            self._dispatch_spec(active, allow, int(K), int(width))
+        else:
+            if self._fused_jit is None:
+                self._fused_jit = self._make_fused()
+            toks, emit, fin, self.state, self.dev.tokens, self.dev.ctx, \
+                self.dev.rem, self.dev.key = self._fused_jit(
+                    self.params, self.state, self.dev.tokens, self.dev.bt,
+                    self.dev.ctx, self.dev.rem, jnp.asarray(allow),
+                    self.dev.key, horizon=int(K), width=int(width))
+            self._inflight = (toks, emit, fin,
+                              [(s, self.batcher.slots[s]) for s in active],
+                              None)
         self.timing.decode_s += time.perf_counter() - t5
 
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:

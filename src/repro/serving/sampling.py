@@ -104,6 +104,88 @@ def make_scan_sampler(kind: str = "greedy", *, temperature: float = 1.0,
     return lambda key, logits: _stochastic(key, logits, temp, tk)
 
 
+def _probs(logits, temperature: float, top_k: int):
+    """The sampling distribution ``_stochastic`` actually draws from, as
+    explicit probabilities [..., V]: temperature-scaled softmax restricted
+    to ``lax.top_k``'s EXACT winner set (same tie-break — a threshold mask
+    would keep extra tied entries and skew the residual)."""
+    z = logits / jnp.maximum(jnp.asarray(temperature, logits.dtype), 1e-6)
+    if top_k:
+        vals, idx = jax.lax.top_k(z, top_k)
+        from repro.models.layers import NEG_INF
+        z = jnp.full_like(z, NEG_INF).at[
+            jnp.arange(z.shape[0])[:, None], idx].set(vals) \
+            if z.ndim == 2 else None
+        assert z is not None, "_probs expects [B, V] logits"
+    return jax.nn.softmax(z.astype(jnp.float32), axis=-1)
+
+
+def make_verifier(kind: str = "greedy", *, temperature: float = 1.0,
+                  top_k: int = 0):
+    """Speculative-decode acceptance rule for ``models.model.decode_verify``:
+    ``(key, logits [B, C, V], qlogits [C-1, B, V] | None, proposals
+    [B, C-1], nprop [B], run [B]) -> (key, candidates [B, C], accept [B])``.
+
+    Greedy: candidates are the target argmax at every position; accept is
+    the longest prefix where the draft proposed exactly those tokens —
+    emitted output is token-identical to target-only greedy decoding.
+
+    Stochastic (temperature / top_k): standard residual rejection sampling.
+    Position i accepts draft token d_i iff ``u_i * q_i(d_i) <= p_i(d_i)``
+    (p, q both built by ``_probs`` so the draw distributions match
+    ``_stochastic`` exactly, including the top-k winner set); the first
+    rejected position resamples from the residual ``max(p - q, 0)``, and a
+    fully-accepted run samples the bonus token straight from ``p`` — the
+    output distribution equals target-only sampling regardless of draft
+    quality. Rows past ``nprop`` never accept (their qlogits are stale
+    scan garbage and must not be read into the residual).
+    """
+    assert kind in ("greedy", "temperature", "top_k"), kind
+    temp = float(temperature)
+    tk = int(top_k) if kind == "top_k" else 0
+
+    if kind == "greedy":
+        def verifier(key, logits, qlogits, proposals, nprop, run):
+            cand = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, C]
+            B, C = cand.shape
+            i = jnp.arange(C - 1)[None]
+            match = (proposals == cand[:, :-1]) & (i < nprop[:, None])
+            acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+            return key, cand, acc.astype(jnp.int32)
+        return verifier
+
+    def verifier(key, logits, qlogits, proposals, nprop, run):
+        B, C, V = logits.shape
+        p = jax.vmap(lambda z: _probs(z, temp, tk), 1, 1)(logits)  # [B,C,V]
+        q = jax.vmap(lambda z: _probs(z, temp, tk))(qlogits)     # [C-1,B,V]
+        q = q.transpose(1, 0, 2)                                 # [B,C-1,V]
+        key, ku, kr = jax.random.split(key, 3)
+        u = jax.random.uniform(ku, (B, C - 1), jnp.float32)
+        prop = jnp.clip(proposals, 0, V - 1)
+        rows = jnp.arange(B)[:, None]
+        cols = jnp.arange(C - 1)[None]
+        p_d = p[:, :-1][rows, cols, prop]
+        q_d = q[rows, cols, prop]
+        ok = (u * q_d <= p_d) & (cols < nprop[:, None])
+        acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+        # distribution for the one non-draft token: the residual at the
+        # first rejected position, or p itself after a full accept (q at
+        # row nprop was never computed by the draft scan — do not read it)
+        p_acc = p[jnp.arange(B), acc]                            # [B, V]
+        q_pad = jnp.concatenate([q, jnp.zeros_like(q[:, :1])], axis=1)
+        q_acc = q_pad[jnp.arange(B), acc]
+        full = (acc == nprop)[:, None]
+        resid = jnp.where(full, p_acc, jnp.maximum(p_acc - q_acc, 0.0))
+        extra = jax.random.categorical(
+            kr, jnp.log(resid + 1e-30), axis=-1).astype(jnp.int32)
+        idx = jnp.arange(C)[None]
+        prop_pad = jnp.concatenate(
+            [prop, jnp.zeros((B, 1), jnp.int32)], axis=1)
+        cand = jnp.where(idx < acc[:, None], prop_pad, extra[:, None])
+        return key, cand.astype(jnp.int32), acc.astype(jnp.int32)
+    return verifier
+
+
 class Sampler:
     """Stateful batch sampler: ``sampler(logits)`` -> np.int32 tokens.
 

@@ -41,6 +41,57 @@ def test_paged_attention_sweep(dtype, B, KVH, G, D, page, maxp):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n_splits", [1, 3])
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("B,KVH,G,T,D,page,maxp", [
+    (2, 1, 1, 3, 8, 4, 4),
+    (3, 2, 2, 5, 16, 4, 5),
+])
+def test_paged_attention_verify_sweep(dtype, n_splits, window, B, KVH, G, T,
+                                      D, page, maxp):
+    """Multi-query verify kernel vs the gather-then-dense oracle: T query
+    rows per slot at positions ctx-1..ctx+T-2 (speculative verify), causal
+    frontier advancing per row, partial last pages, optional window."""
+    from repro.kernels.paged_attention import paged_attention_verify
+    P_ = B * maxp + 2
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, KVH, G, T, D),
+                          jnp.float32)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (P_, page, KVH, D))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (P_, page, KVH, D))
+    bt = jnp.asarray(np.random.default_rng(0).permutation(P_)[:B * maxp]
+                     .reshape(B, maxp).astype(np.int32))
+    # ctx counts tokens INCLUDING the first query row; leave T-1 slots of
+    # page headroom so the verify rows all fit in the table
+    ctx = jnp.asarray(np.random.default_rng(1).integers(
+        1, maxp * page - T + 2, B).astype(np.int32))
+    w = None if window is None else jnp.full((B,), window, jnp.int32)
+    out = paged_attention_verify(
+        q.astype(dtype), kp.astype(dtype), vp.astype(dtype), bt, ctx,
+        window=w, n_splits=n_splits, interpret=True)
+    want = ref.paged_attention_verify_ref(q, kp, vp, bt, ctx, window=w)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_attention_verify_degenerates_to_decode():
+    """T=1 verify must be bit-comparable to the plain decode kernel (same
+    math, qpos=1 mask degenerates to tok < ctx)."""
+    from repro.kernels.paged_attention import paged_attention_verify
+    B, KVH, G, D, page, maxp = 2, 2, 3, 16, 4, 4
+    P_ = B * maxp + 1
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, KVH, G, 1, D))
+    kp = jax.random.normal(jax.random.PRNGKey(1), (P_, page, KVH, D))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (P_, page, KVH, D))
+    bt = jnp.asarray(np.random.default_rng(0).permutation(P_)[:B * maxp]
+                     .reshape(B, maxp).astype(np.int32))
+    ctx = jnp.asarray([5, maxp * page], np.int32)
+    out = paged_attention_verify(q, kp, vp, bt, ctx, interpret=True)
+    want = paged_attention(q[:, :, :, 0], kp, vp, bt, ctx, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, :, :, 0]), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,KVH,G,D,T,S", [
     (2, 2, 3, 16, 32, 4),
     (1, 1, 8, 32, 64, 8),
