@@ -85,6 +85,11 @@ def _norm(rows: list[dict]) -> dict[tuple, dict]:
             "accept": r.get("accept_len_mean"),
             "abs_thr": r["decode_tok_s"],
             "abs_ttft": r["ttft_ms"],
+            # tail latency from the per-request telemetry records (rows
+            # predating the telemetry fields normalize to None -> ungated)
+            "ttft_p99": (r["ttft_p99_ms"] / ref["ttft_p99_ms"]
+                         if r.get("ttft_p99_ms", 0) > 0
+                         and ref.get("ttft_p99_ms", 0) > 0 else None),
         }
     return out
 
@@ -145,6 +150,15 @@ def check_serving(base: dict, fresh_runs: list[dict], tol: float,
                 and ttft > br["ttft"] * (1 + tol):
             fails.append(f"serving {key}: normalized ttft_ms regressed "
                          f"{br['ttft']:.3f} -> {ttft:.3f} (>{tol:.0%})")
+        # p99 tail TTFT (per-request records): noisier than the mean, so it
+        # gets double the tolerance — catches a mode that keeps its mean
+        # but starves a straggler
+        p99 = _median([fr.get("ttft_p99") for fr in frs])
+        if br.get("ttft_p99") is not None and p99 is not None \
+                and p99 > br["ttft_p99"] * (1 + 2 * tol):
+            fails.append(f"serving {key}: normalized ttft_p99 regressed "
+                         f"{br['ttft_p99']:.3f} -> {p99:.3f} "
+                         f"(>{2 * tol:.0%})")
         if absolute:
             athr = _median([fr["abs_thr"] for fr in frs])
             if athr < br["abs_thr"] * (1 - tol):

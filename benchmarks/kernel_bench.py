@@ -103,9 +103,10 @@ def decode_step_bench(emit, *, smoke: bool = False):
         err = float(jnp.abs(o_d - o_h).max())
         t_dense = _time(dense_full)
         t_hot = _time(hot_path)
+        from repro.kernels.backend import decode_hbm_bytes
         el = 4                                    # fp32 pool
-        dense_mb = 3 * 2 * W * page * KVH * D * el / 1e6
-        hot_mb = 2 * ctx_t * KVH * D * el / 1e6
+        dense_mb = 3 * decode_hbm_bytes(W * page, KVH, D, el) / 1e6
+        hot_mb = decode_hbm_bytes(ctx_t, KVH, D, el) / 1e6
         emit(f"kernel_decode_step_ctx{ctx_t}", t_dense * 1e6,
              f"hot_us={t_hot * 1e6:.0f} speedup={t_dense / t_hot:.1f}x "
              f"live_pages={live}/{W} bucket={wb} "

@@ -92,6 +92,7 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
     is compiled before the clock starts); ``spec`` additionally enables the
     draft engine with that proposal horizon."""
     from repro.serving import DecodeEngine, EngineConfig
+    from repro.telemetry import TelemetryConfig
     if oracle or spec is not None:
         cfg, params, dcfg, dparams = _spec_setup(arch)
     else:
@@ -101,7 +102,8 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
                         eos_token=-1, prefill_mode=mode, prefill_chunk=chunk,
                         decode_horizon=horizon,
                         draft_config=dcfg if spec is not None else None,
-                        spec_horizon=spec if spec is not None else 4)
+                        spec_horizon=spec if spec is not None else 4,
+                        telemetry=TelemetryConfig(metrics=True))
     eng = DecodeEngine(cfg, ecfg, params,
                        draft_params=dparams if spec is not None else None)
     if oracle or spec is not None:
@@ -131,7 +133,17 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
     dtoks = tm["decode_tokens"] - tm0["decode_tokens"]
     dpre = tm["prefill_s"] - tm0["prefill_s"]
     syncs = tm["device_syncs"] - tm0["device_syncs"]
-    ttft = [eng.first_tok_t[r] - eng.submit_t[r] for r in outs]
+    # latencies come from the telemetry per-request records (one source of
+    # truth with serving) — the engine's legacy first_tok_t/submit_t dicts
+    # must agree exactly, which pins the records to the same clock
+    from repro.telemetry import percentile
+    recs = [r for r in eng.tel.tracker.records if r.req_id < 1000]
+    assert len(recs) == len(outs), (len(recs), len(outs))
+    for r in recs:
+        legacy = eng.first_tok_t[r.req_id] - eng.submit_t[r.req_id]
+        assert abs(r.ttft_s - legacy) < 1e-9, (r.req_id, r.ttft_s, legacy)
+    ttft = [r.ttft_s for r in recs]
+    tpot = [r.tpot_s for r in recs if r.tpot_s is not None]
     extra = {}
     if spec is not None:
         from repro.models import model as MDL
@@ -152,6 +164,10 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
             "tok_s": toks / max(dt, 1e-9),
             "decode_tok_s": dtoks / max(dt - dpre, 1e-9),
             "ttft_ms": 1e3 * float(np.mean(ttft)) if ttft else 0.0,
+            "ttft_p50_ms": 1e3 * percentile(ttft, 50),
+            "ttft_p99_ms": 1e3 * percentile(ttft, 99),
+            "tpot_ms": 1e3 * float(np.mean(tpot)) if tpot else 0.0,
+            "tpot_p50_ms": 1e3 * percentile(tpot, 50),
             "decode_step_us": 1e6 * (tm["decode_s"] - tm0["decode_s"])
             / max(1, dtoks),
             "host_us": 1e6 * (tm["host_s"] - tm0["host_s"])

@@ -169,6 +169,15 @@ def _attn_util(sys: System, model: LLM, B: int, avg_ctx: float,
     return occupancy * balance
 
 
+def attn_channel_util(sys: System, model: LLM, B: int, avg_ctx: float,
+                      ctx_cv: float = 0.0) -> float:
+    """Public alias of the attention channel-utilization term — the ITPP
+    (tokens / channel-capacity) vs HFA ((request, head) occupancy x balance)
+    proxy. ``telemetry.pim_counters`` emits this live during serving from
+    the scheduler's host-side context snapshot."""
+    return _attn_util(sys, model, B, avg_ctx, ctx_cv)
+
+
 def decode_latency(sys: System, model: LLM, B: int, avg_ctx: float,
                    *, ctx_cv: float = 0.3) -> dict:
     """Seconds per decode step for batch B at average context avg_ctx."""

@@ -91,6 +91,12 @@ class ContinuousBatcher:
         self.cache_tokens = cache_tokens
         # same-tick prefix dedup (see _dedup_defer); engines may disable
         self.dedup = True
+        # telemetry events hook: an object with ``on_admit(req, slot)`` /
+        # ``on_preempt(req, slot)`` / ``on_finish(req, slot)`` called at the
+        # exact bookkeeping points (repro.telemetry.RequestTracker). None
+        # (the default) costs one identity check per event — disabled
+        # telemetry adds no work and no allocation here.
+        self.events = None
         # recurrent-state hook: ``rstate_hook(req, slot, finished)`` fires
         # when a slot's pages are about to be released — preemption
         # (finished=False: the engine snapshots the recurrent carry + the
@@ -196,6 +202,8 @@ class ContinuousBatcher:
         self.slots[s] = None
         self._snap_clear(s)
         self.stats.preempted += 1
+        if self.events is not None:
+            self.events.on_preempt(req, s)
 
     def _release_pages(self, req: Request, *, finished: bool) -> None:
         """Free a request's pages; with a prefix cache, first record its
@@ -392,6 +400,8 @@ class ContinuousBatcher:
                 self._snap_admit(s, req, pages)
                 self.stats.admitted += 1
                 admitted.append((s, req))
+                if self.events is not None:
+                    self.events.on_admit(req, s)
                 if dedup:              # later candidates defer vs this leader
                     inflight.append(self.cache_tokens(req, False))
                 break
@@ -419,6 +429,8 @@ class ContinuousBatcher:
                         self.rstate_hook(self.slots[s], s, True)
                     self._release_pages(self.slots[s], finished=True)
                     self.stats.completed += 1
+                    if self.events is not None:
+                        self.events.on_finish(self.slots[s], s)
                     self.slots[s] = None
                     self._snap_clear(s)
         admitted = self._try_admit()

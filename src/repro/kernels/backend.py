@@ -68,3 +68,14 @@ class KernelConfig:
 
 
 DEFAULT_KERNELS = KernelConfig()
+
+
+def decode_hbm_bytes(ctx_tokens: float, n_kv_heads: int, d_head: int,
+                     bytes_per_el: int, n_layers: int = 1) -> float:
+    """Modeled KV bytes one decode step streams from HBM for a request at
+    context ``ctx_tokens``: K and V read once across the live context. The
+    hot-path ideal the paged kernels approach (a dense gather reads the
+    full table width instead) — used by ``benchmarks/kernel_bench`` for the
+    offline MB/token report and by ``telemetry.pim_counters`` for the same
+    quantity live during serving."""
+    return 2.0 * ctx_tokens * n_kv_heads * d_head * bytes_per_el * n_layers

@@ -21,6 +21,15 @@ covering fraction ``f`` of its tokens (multi-tenant shared-prefix traffic);
 ``--prefix-cache`` turns on the radix KV sharing and ``--host-pages N``
 adds the host offload tier below the device pool (see repro.kvcache /
 docs/kvcache.md). Cache hit/swap counters are reported alongside.
+
+Telemetry (repro.telemetry, docs/observability.md): ``--metrics-port N``
+serves Prometheus text on ``http://127.0.0.1:N/metrics`` (0 = pick an
+ephemeral port, printed at startup), ``--trace-out trace.json`` writes a
+Perfetto/chrome://tracing timeline of the tick pipeline, ``--request-log
+records.jsonl`` exports one JSON record per finished request, and
+``--stats-every S`` prints a one-line summary every S seconds while
+serving. With none of these flags the telemetry layer is the shared no-op:
+zero extra work, zero extra device syncs.
 """
 from __future__ import annotations
 
@@ -35,7 +44,19 @@ from repro.data.pipeline import request_trace
 from repro.serving import DecodeEngine, EngineConfig
 
 
-def build_engine(args) -> DecodeEngine:
+def make_serve_telemetry(args):
+    """Build the Telemetry facade from the CLI flags — the shared no-op
+    when every telemetry flag is off (EngineConfig.telemetry=None path)."""
+    from repro.telemetry import TelemetryConfig, make_telemetry
+    want_metrics = args.metrics_port >= 0 or args.stats_every > 0
+    if not (want_metrics or args.trace_out or args.request_log):
+        return make_telemetry(None)
+    return make_telemetry(TelemetryConfig(
+        metrics=True, trace_path=args.trace_out or None,
+        request_log=args.request_log or None))
+
+
+def build_engine(args, telemetry=None) -> DecodeEngine:
     cfg = replace(reduced(get_config(args.arch)), dtype="float32")
     draft_cfg = None
     if args.draft:
@@ -60,7 +81,8 @@ def build_engine(args) -> DecodeEngine:
                         draft_config=draft_cfg,
                         spec_horizon=args.spec_horizon,
                         reserve_gentle=args.reserve_gentle,
-                        state_resume=not args.no_state_resume)
+                        state_resume=not args.no_state_resume,
+                        telemetry=telemetry)
     return DecodeEngine(cfg, ecfg)
 
 
@@ -141,14 +163,44 @@ def main(argv=None):
     ap.add_argument("--reserve-gentle", action="store_true",
                     help="horizon reservation declines to evict radix-"
                          "cached pages, degrading the horizon instead")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve Prometheus text on this port (0 = "
+                         "ephemeral, printed; -1 = off)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto/chrome-trace JSON of the tick "
+                         "pipeline to this path")
+    ap.add_argument("--request-log", default="",
+                    help="append one JSON record per finished request to "
+                         "this path")
+    ap.add_argument("--stats-every", type=float, default=0.0,
+                    help="print a telemetry stats line every S seconds "
+                         "while serving (0 = off)")
     args = ap.parse_args(argv)
 
-    eng = build_engine(args)
+    tel = make_serve_telemetry(args)
+    eng = build_engine(args, telemetry=tel)
+    if tel.enabled and args.metrics_port >= 0:
+        from repro.telemetry.prom import MetricsServer
+        srv = MetricsServer(tel.registry, args.metrics_port)
+        print(f"[serve] metrics: {srv.url}", flush=True)
+    stop_stats = None
+    if tel.enabled and args.stats_every > 0:
+        import threading
+        stop_stats = threading.Event()
+
+        def _ticker():
+            while not stop_stats.wait(args.stats_every):
+                print(f"[serve] {tel.stats_line()}", flush=True)
+
+        threading.Thread(target=_ticker, name="stats-line",
+                         daemon=True).start()
     submit_trace(eng, args)
 
     t0 = time.time()
     eng.run(100_000)
     dt = time.time() - t0
+    if stop_stats is not None:
+        stop_stats.set()
     st = eng.batcher.stats
     toks = sum(len(v) for v in eng.outputs.values())
     tm = eng.timing.as_dict()
@@ -178,6 +230,19 @@ def main(argv=None):
               f"evicted={cs['evicted_pages']} "
               f"swap_out={cs.get('swapped_out_pages', 0)} "
               f"swap_in={cs.get('swapped_in_pages', 0)}", flush=True)
+    if tel.enabled:
+        print(f"[serve] {tel.stats_line()}", flush=True)
+        sm = tel.summary()
+        if "ttft_p50_ms" in sm:
+            print(f"[serve] latency: ttft p50/p90/p99 = "
+                  f"{sm['ttft_p50_ms']:.1f}/{sm['ttft_p90_ms']:.1f}/"
+                  f"{sm['ttft_p99_ms']:.1f} ms  tpot p50 = "
+                  f"{sm.get('tpot_p50_ms', 0):.2f} ms", flush=True)
+        n = tel.save_trace()
+        if n is not None:
+            print(f"[serve] trace: {args.trace_out} ({n} events)",
+                  flush=True)
+        tel.close()
     return st.avg_batch
 
 

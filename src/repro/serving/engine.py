@@ -43,6 +43,7 @@ sharding plan for the production layout.
 from __future__ import annotations
 
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -129,6 +130,14 @@ class EngineConfig:
     # seed semantics (full recompute on resume). Slot-mode prefill never
     # consumes snapshots (it is the recompute reference path).
     state_resume: bool = True
+    # ---- telemetry (repro.telemetry) ----
+    # None (default) = the shared no-op facade: no registry, no scheduler
+    # events hook, no trace buffer — behavior and device-sync count are
+    # identical to a build without telemetry. A TelemetryConfig (or an
+    # already-built Telemetry, e.g. serve.py's) turns on the metrics
+    # registry / per-request tracing / Perfetto tick timeline; all of it is
+    # host-side bookkeeping riding the existing horizon readback.
+    telemetry: Any = None
 
 
 @dataclass
@@ -355,6 +364,36 @@ class DecodeEngine:
             self.spec_rounds = 0        # verify passes over running slots
             self.spec_proposed = 0      # draft tokens offered
             self.spec_accepted = 0      # draft tokens accepted
+        # ---- telemetry (must come last: bindings read everything above).
+        # Disabled -> the shared NULL facade; the scheduler's events hook
+        # stays None and every tel.* call below is a bound no-op.
+        from repro.telemetry import make_telemetry
+        self.tel = make_telemetry(ecfg.telemetry)
+        self.tel.attach_engine(self)
+        # (dispatch wall-clock, dispatch-time ctx snapshot, horizon seq) of
+        # the in-flight horizon — feeds the inferred device span and the
+        # modeled-bytes counter at collect; stays None when tel is off
+        self._horizon_meta: tuple | None = None
+        self._horizon_seq = 0
+
+    # ---- unified timing/trace phase helper ----------------------------
+    @contextmanager
+    def _phase(self, acc: str, track: str | None = None,
+               name: str | None = None):
+        """Accumulate one timed segment into ``EngineTiming.<acc>`` —
+        the SINGLE bookkeeping path both ``step()`` and the fused tick use,
+        so host/prefill/decode splits stay consistent when the APIs
+        interleave — and, when tracing, emit the segment as a Perfetto
+        slice on ``track``."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            setattr(self.timing, acc, getattr(self.timing, acc) + dt)
+            tr = self.tel.trace
+            if tr is not None and track is not None:
+                tr.slice(track, name or acc, t0, dt)
 
     # ------------------------------------------------------------------
     def submit(self, req_id: int, prompt: np.ndarray,
@@ -362,6 +401,8 @@ class DecodeEngine:
         self.prompts[req_id] = np.asarray(prompt, np.int32)
         self.outputs[req_id] = []
         self.submit_t[req_id] = time.perf_counter()
+        self.tel.on_submit(req_id, len(prompt), max_new_tokens,
+                           self.submit_t[req_id])
         req = Request(req_id, len(prompt), max_new_tokens)
         if self.prefiller.name == "chunked":
             req.chunked_prefill = True
@@ -406,6 +447,9 @@ class DecodeEngine:
             self.tokens[slot] = tok
             self.outputs[req.req_id].append(int(tok))
             self.first_tok_t.setdefault(req.req_id, time.perf_counter())
+            if self.tel.enabled:
+                self.tel.on_tokens(req.req_id, 1,
+                                   self.first_tok_t[req.req_id])
         else:
             self.tokens[slot] = self.outputs[req.req_id][-1]
         self.batcher.dirty.add(slot)
@@ -585,98 +629,102 @@ class DecodeEngine:
         device mirror must re-sync before the next horizon), and the
         returned mask is also stashed for a later ``run()``."""
         E = self.ecfg
-        t0 = time.perf_counter()
-        self._drain_snapshots()
-        if self._pending_fin is not None:
-            finished_mask = self._pending_fin if finished_mask is None \
-                else (np.asarray(finished_mask, bool) | self._pending_fin)
-            self._pending_fin = None
-        admitted, active = self.batcher.step(finished_mask)
-        if self.cache is not None:
-            # drain last tick's swap-outs + watermark offload (ping-pong),
-            # then replay queued device ops (swap-in scatters, CoW copies)
-            # so prefill and decode read fully materialized pages
-            self.cache.maintain()
-            if self.cache.has_pending:
-                self.state["pool"] = self.cache.apply_pending(
-                    self.state["pool"])
-        t1 = time.perf_counter()
-        self.timing.host_s += t1 - t0
+        with self._phase("host_s", "host", "schedule"):
+            self._drain_snapshots()
+            if self._pending_fin is not None:
+                finished_mask = self._pending_fin if finished_mask is None \
+                    else (np.asarray(finished_mask, bool) | self._pending_fin)
+                self._pending_fin = None
+            admitted, active = self.batcher.step(finished_mask)
+            if self.cache is not None:
+                # drain last tick's swap-outs + watermark offload
+                # (ping-pong), then replay queued device ops (swap-in
+                # scatters, CoW copies) so prefill and decode read fully
+                # materialized pages
+                self.cache.maintain()
+                if self.cache.has_pending:
+                    self.state["pool"] = self.cache.apply_pending(
+                        self.state["pool"])
         if admitted or self.prefiller.busy:
-            active = self.prefiller.run(admitted, active)
-            t2 = time.perf_counter()
-            self.timing.prefill_s += t2 - t1
+            with self._phase("prefill_s", "prefill", "prefill"):
+                active = self.prefiller.run(admitted, active)
         self.timing.steps += 1
         if not active:
             return np.zeros((E.n_slots,), bool)
 
         # ---- config-buffer assembly, vectorized over slots ------------
-        t3 = time.perf_counter()
-        ctx = self.batcher.context_lens()
-        bt = self.batcher.block_tables(self.pool_spec.max_pages_per_req)
-        W = self.pool_spec.max_pages_per_req
-        active_mask = np.zeros((E.n_slots,), bool)
-        active_mask[active] = True
-        # host-numpy twin of kernels.ops.write_targets (the fused scan's
-        # device-side resolution) — the two must stay bit-identical for
-        # step() and run() to agree (regression: mixed step/run test)
-        t = ctx - 1                    # slot of the token being written
-        vp = np.clip(t, 0, None) // E.page_size
-        if self.rt.ring_width:
-            vp = vp % self.rt.ring_width
-        # idle slots target page n_pages (out of bounds) -> scatter drops
-        npage = np.where(active_mask,
-                         bt[self._slot_ids, np.minimum(vp, W - 1)],
-                         E.n_pages).astype(np.int32)
-        noff = np.where(active_mask, np.clip(t, 0, None) % E.page_size,
-                        0).astype(np.int32)
-        # context-adaptive table width: slice the Va2Pa table to a pow2
-        # bucket of the batch's live-page high-water mark so decode
-        # attention (kernel grid or gathered width alike) tracks actual
-        # context, not max_context (reuses the prefill bucketing)
-        if E.decode_bucket and W > 16:
-            from repro.serving.prefill import decode_table_bucket
-            bt = bt[:, :decode_table_bucket(self.batcher.max_live_pages(), W)]
-        if self._decode_jit is None:
-            def fn(params, state, tokens, bt, ctx, npage, noff, run):
-                return MDL.decode_step(self.cfg, params, state, tokens, bt,
-                                       ctx, npage, noff, run=run, rt=self.rt)
-            self._decode_jit = jax.jit(fn)
-        t4 = time.perf_counter()
-        self.timing.host_s += t4 - t3
+        with self._phase("host_s", "host", "config"):
+            ctx = self.batcher.context_lens()
+            bt = self.batcher.block_tables(self.pool_spec.max_pages_per_req)
+            W = self.pool_spec.max_pages_per_req
+            active_mask = np.zeros((E.n_slots,), bool)
+            active_mask[active] = True
+            # host-numpy twin of kernels.ops.write_targets (the fused scan's
+            # device-side resolution) — the two must stay bit-identical for
+            # step() and run() to agree (regression: mixed step/run test)
+            t = ctx - 1                # slot of the token being written
+            vp = np.clip(t, 0, None) // E.page_size
+            if self.rt.ring_width:
+                vp = vp % self.rt.ring_width
+            # idle slots target page n_pages (out of bounds) -> scatter drops
+            npage = np.where(active_mask,
+                             bt[self._slot_ids, np.minimum(vp, W - 1)],
+                             E.n_pages).astype(np.int32)
+            noff = np.where(active_mask, np.clip(t, 0, None) % E.page_size,
+                            0).astype(np.int32)
+            # context-adaptive table width: slice the Va2Pa table to a pow2
+            # bucket of the batch's live-page high-water mark so decode
+            # attention (kernel grid or gathered width alike) tracks actual
+            # context, not max_context (reuses the prefill bucketing)
+            if E.decode_bucket and W > 16:
+                from repro.serving.prefill import decode_table_bucket
+                bt = bt[:, :decode_table_bucket(self.batcher.max_live_pages(),
+                                                W)]
+            if self._decode_jit is None:
+                def fn(params, state, tokens, bt, ctx, npage, noff, run):
+                    return MDL.decode_step(self.cfg, params, state, tokens,
+                                           bt, ctx, npage, noff, run=run,
+                                           rt=self.rt)
+                self._decode_jit = jax.jit(fn)
 
         # ``run`` masks the recurrent-state advance: idle and mid-chunk-
         # prefill slots must not absorb their stale pending token (their
         # attention KV writes already drop via the out-of-bounds npage)
-        logits, self.state = self._decode_jit(
-            self.params, self.state, jnp.asarray(self.tokens),
-            jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(npage),
-            jnp.asarray(noff), jnp.asarray(active_mask))
-        logits = np.asarray(logits)
-        self.timing.device_syncs += 1
-        if self.sample is not None:    # legacy per-row callable: active only
-            nxt = np.zeros((E.n_slots,), np.int32)
-            nxt[active] = self._sample_rows(logits[active])
-        else:
-            nxt = self._sample_rows(logits)
-        t5 = time.perf_counter()
-        self.timing.decode_s += t5 - t4
+        with self._phase("decode_s", "sync", "decode+sample"):
+            logits, self.state = self._decode_jit(
+                self.params, self.state, jnp.asarray(self.tokens),
+                jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(npage),
+                jnp.asarray(noff), jnp.asarray(active_mask))
+            logits = np.asarray(logits)
+            self.timing.device_syncs += 1
+            if self.sample is not None:  # legacy per-row callable: active only
+                nxt = np.zeros((E.n_slots,), np.int32)
+                nxt[active] = self._sample_rows(logits[active])
+            else:
+                nxt = self._sample_rows(logits)
 
         # ---- EOS / budget bookkeeping, vectorized ----------------------
-        gen = np.asarray([0 if r is None else r.generated
-                          for r in self.batcher.slots], np.int32)
-        budget = np.asarray([1 if r is None else r.max_new_tokens
-                             for r in self.batcher.slots], np.int32)
-        self.tokens = np.where(active_mask, nxt, self.tokens).astype(np.int32)
-        finished = active_mask & ((nxt == E.eos_token) | (gen >= budget))
-        for s in active:
-            self.outputs[self.batcher.slots[s].req_id].append(int(nxt[s]))
-        self.timing.decode_tokens += len(active)
-        # the device slot mirror did not see this host-side advance; a later
-        # fused run() must re-upload these rows (and process this mask)
-        self.batcher.dirty.update(active)
-        self._pending_fin = finished
-        self.timing.host_s += time.perf_counter() - t5
+        with self._phase("host_s", "host", "bookkeep"):
+            gen = np.asarray([0 if r is None else r.generated
+                              for r in self.batcher.slots], np.int32)
+            budget = np.asarray([1 if r is None else r.max_new_tokens
+                                 for r in self.batcher.slots], np.int32)
+            self.tokens = np.where(active_mask, nxt,
+                                   self.tokens).astype(np.int32)
+            finished = active_mask & ((nxt == E.eos_token) | (gen >= budget))
+            for s in active:
+                self.outputs[self.batcher.slots[s].req_id].append(int(nxt[s]))
+            self.timing.decode_tokens += len(active)
+            if self.tel.enabled:
+                tnow = time.perf_counter()
+                for s in active:
+                    self.tel.on_tokens(self.batcher.slots[s].req_id, 1, tnow)
+                self.tel.on_horizon(float(ctx[active].sum()))
+            # the device slot mirror did not see this host-side advance; a
+            # later fused run() must re-upload these rows (and process this
+            # mask)
+            self.batcher.dirty.update(active)
+            self._pending_fin = finished
         return finished
 
     # ---- fused multi-step path ---------------------------------------
@@ -846,18 +894,35 @@ class DecodeEngine:
             return None
         toks, emit, fin, pairs, spec = self._inflight
         self._inflight = None
-        t0 = time.perf_counter()
-        toks, emit, fin = np.asarray(toks), np.asarray(emit), np.asarray(fin)
-        acc = np.asarray(spec[0]) if spec is not None else None
-        self.timing.decode_s += time.perf_counter() - t0
+        meta, self._horizon_meta = self._horizon_meta, None
+        with self._phase("decode_s", "sync", "collect"):
+            toks, emit, fin = (np.asarray(toks), np.asarray(emit),
+                               np.asarray(fin))
+            acc = np.asarray(spec[0]) if spec is not None else None
         self.timing.device_syncs += 1
+        tel = self.tel.enabled
+        if tel and meta is not None and self.tel.trace is not None:
+            # the horizon's device-busy window, inferred dispatch->readback:
+            # an async span so overlapping host slices stay visible
+            self.tel.trace.span("device", "horizon", meta[2], meta[0],
+                                time.perf_counter(),
+                                args={"slots": len(pairs)})
+        # one readback wall-clock for the whole horizon: every emission in
+        # it became host-visible at the same sync, and the per-request
+        # records must reproduce the first_tok_t-based TTFT exactly
+        tnow = time.perf_counter()
+        tok_ctx = 0.0
         finished = np.zeros((self.ecfg.n_slots,), bool)
         for slot, req in pairs:
             ts = toks[emit[:, slot], slot]
             if not len(ts):            # pool-starved to zero steps
                 continue
             self.outputs[req.req_id].extend(int(t) for t in ts)
-            self.first_tok_t.setdefault(req.req_id, time.perf_counter())
+            self.first_tok_t.setdefault(req.req_id, tnow)
+            if tel:
+                self.tel.on_tokens(req.req_id, int(len(ts)), tnow)
+                if meta is not None:
+                    tok_ctx += len(ts) * float(meta[1][slot])
             if spec is not None:
                 # draft-pool coverage after the round: the draft absorbed
                 # its proposals' KV up to the accepted/emitted frontier
@@ -869,6 +934,8 @@ class DecodeEngine:
                 self.spec_rounds += 1
                 self.spec_proposed += nprop
                 self.spec_accepted += int(acc[slot])
+                if tel:
+                    self.tel.on_spec(req.req_id, nprop, int(acc[slot]))
             # the tick's step() already reserved one token; the rest of the
             # horizon's emissions land here
             req.generated += len(ts) - 1
@@ -877,6 +944,8 @@ class DecodeEngine:
             if fin[slot] and self._dstate is not None:
                 self._dlen.pop(req.req_id, None)
             self.timing.decode_tokens += int(len(ts))
+        if tel:
+            self.tel.on_horizon(tok_ctx)
         return finished
 
     def _step_fused(self) -> None:
@@ -889,15 +958,13 @@ class DecodeEngine:
         by dispatching the next horizon WITHOUT blocking on it.
         """
         E = self.ecfg
-        t0 = time.perf_counter()
         # ---- overlap window: result-independent host work --------------
-        if self.cache is not None:
-            self.cache.maintain()
-        self._drain_snapshots()
-        if self._inflight is not None and self.batcher.queue:
-            self.batcher.prefetch_peeks(limit=2 * E.n_slots)
-        t1 = time.perf_counter()
-        self.timing.host_s += t1 - t0
+        with self._phase("host_s", "host", "overlap"):
+            if self.cache is not None:
+                self.cache.maintain()
+            self._drain_snapshots()
+            if self._inflight is not None and self.batcher.queue:
+                self.batcher.prefetch_peeks(limit=2 * E.n_slots)
 
         # ---- sync: fold the horizon's tokens into host bookkeeping -----
         finished = self._collect_horizon()
@@ -905,63 +972,68 @@ class DecodeEngine:
             finished, self._pending_fin = self._pending_fin, None
 
         # ---- schedule + prefill ----------------------------------------
-        t2 = time.perf_counter()
-        admitted, active = self.batcher.step(finished)
-        if self.cache is not None and self.cache.has_pending:
-            # swap-in scatters / CoW copies queued by this tick's
-            # admissions must land before prefill or decode read the pages
-            self.state["pool"] = self.cache.apply_pending(self.state["pool"])
-        t3 = time.perf_counter()
-        self.timing.host_s += t3 - t2
+        with self._phase("host_s", "host", "schedule"):
+            admitted, active = self.batcher.step(finished)
+            if self.cache is not None and self.cache.has_pending:
+                # swap-in scatters / CoW copies queued by this tick's
+                # admissions must land before prefill or decode read the
+                # pages
+                self.state["pool"] = self.cache.apply_pending(
+                    self.state["pool"])
         if admitted or self.prefiller.busy:
-            active = self.prefiller.run(admitted, active)
-            self.timing.prefill_s += time.perf_counter() - t3
+            with self._phase("prefill_s", "prefill", "prefill"):
+                active = self.prefiller.run(admitted, active)
         self.timing.steps += 1
         if not active:
             return
 
         # ---- horizon reservation + incremental config update -----------
-        t4 = time.perf_counter()
-        spec = self._dstate is not None
-        if spec:
-            # the draft must re-absorb any context it did not write —
-            # every (re)admission starts from zero (swap-in / CoW /
-            # snapshot restore only rebuild the target's pages)
-            for _s, req in admitted:
-                self._dlen[req.req_id] = 0
-            K = max(1, E.spec_horizon + 1)
-        else:
-            K = max(1, E.decode_horizon)
-        cap = self.prefiller.max_horizon
-        if cap is not None:
-            K = min(K, cap)
-        allow = self.batcher.reserve_horizon(active, K,
-                                             gentle=E.reserve_gentle)
-        self._sync_device_slots()
-        W = self.pool_spec.max_pages_per_req
-        width = W
-        if E.decode_bucket and W > 16:
-            from repro.serving.prefill import decode_table_bucket
-            width = decode_table_bucket(self.batcher.max_live_pages(), W)
-        self.timing.host_s += time.perf_counter() - t4
+        with self._phase("host_s", "host", "config"):
+            spec = self._dstate is not None
+            if spec:
+                # the draft must re-absorb any context it did not write —
+                # every (re)admission starts from zero (swap-in / CoW /
+                # snapshot restore only rebuild the target's pages)
+                for _s, req in admitted:
+                    self._dlen[req.req_id] = 0
+                K = max(1, E.spec_horizon + 1)
+            else:
+                K = max(1, E.decode_horizon)
+            cap = self.prefiller.max_horizon
+            if cap is not None:
+                K = min(K, cap)
+            allow = self.batcher.reserve_horizon(active, K,
+                                                 gentle=E.reserve_gentle)
+            self._sync_device_slots()
+            W = self.pool_spec.max_pages_per_req
+            width = W
+            if E.decode_bucket and W > 16:
+                from repro.serving.prefill import decode_table_bucket
+                width = decode_table_bucket(self.batcher.max_live_pages(), W)
 
         # ---- dispatch; do NOT block ------------------------------------
-        t5 = time.perf_counter()
-        if spec:
-            self._draft_catchup(active)
-            self._dispatch_spec(active, allow, int(K), int(width))
-        else:
-            if self._fused_jit is None:
-                self._fused_jit = self._make_fused()
-            toks, emit, fin, self.state, self.dev.tokens, self.dev.ctx, \
-                self.dev.rem, self.dev.key = self._fused_jit(
-                    self.params, self.state, self.dev.tokens, self.dev.bt,
-                    self.dev.ctx, self.dev.rem, jnp.asarray(allow),
-                    self.dev.key, horizon=int(K), width=int(width))
-            self._inflight = (toks, emit, fin,
-                              [(s, self.batcher.slots[s]) for s in active],
-                              None)
-        self.timing.decode_s += time.perf_counter() - t5
+        with self._phase("decode_s", "dispatch",
+                         "spec_dispatch" if spec else "dispatch"):
+            if self.tel.enabled:
+                self._horizon_seq += 1
+                self._horizon_meta = (time.perf_counter(),
+                                      self.batcher._ctx.copy(),
+                                      self._horizon_seq)
+            if spec:
+                self._draft_catchup(active)
+                self._dispatch_spec(active, allow, int(K), int(width))
+            else:
+                if self._fused_jit is None:
+                    self._fused_jit = self._make_fused()
+                toks, emit, fin, self.state, self.dev.tokens, self.dev.ctx, \
+                    self.dev.rem, self.dev.key = self._fused_jit(
+                        self.params, self.state, self.dev.tokens, self.dev.bt,
+                        self.dev.ctx, self.dev.rem, jnp.asarray(allow),
+                        self.dev.key, horizon=int(K), width=int(width))
+                self._inflight = (toks, emit, fin,
+                                  [(s, self.batcher.slots[s])
+                                   for s in active],
+                                  None)
 
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
         for _ in range(max_steps):
