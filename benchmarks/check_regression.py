@@ -76,20 +76,32 @@ def _norm(rows: list[dict]) -> dict[tuple, dict]:
     out = {}
     for r in rows:
         ref = refs[r.get("trace", "")]
+        # every field is None-safe: a baseline (or fresh run) produced
+        # before a counter existed simply leaves it ungated instead of
+        # crashing the gate with a KeyError/TypeError
+        thr = r.get("decode_tok_s")
+        rthr = ref.get("decode_tok_s")
+        ttft, rttft = r.get("ttft_ms"), ref.get("ttft_ms")
         out[_skey(r)] = {
-            "thr": r["decode_tok_s"] / max(ref["decode_tok_s"], 1e-9),
-            "ttft": (r["ttft_ms"] / ref["ttft_ms"]
-                     if r["ttft_ms"] > 0 and ref["ttft_ms"] > 0 else None),
-            "syncs": r["syncs_per_token"],
-            "tokens": r["tokens"],
+            "thr": (thr / max(rthr, 1e-9)
+                    if thr is not None and rthr is not None else None),
+            "ttft": (ttft / rttft
+                     if ttft and rttft and ttft > 0 and rttft > 0 else None),
+            "syncs": r.get("syncs_per_token"),
+            "tokens": r.get("tokens"),
             "accept": r.get("accept_len_mean"),
-            "abs_thr": r["decode_tok_s"],
-            "abs_ttft": r["ttft_ms"],
+            # robustness counters (PR 8): deterministic under the bench's
+            # seeded trace, so an exact-match hard gate once both sides
+            # report them
+            "aborted": r.get("aborted"),
+            "faults": r.get("faults_injected"),
+            "abs_thr": thr,
+            "abs_ttft": ttft,
             # tail latency from the per-request telemetry records (rows
             # predating the telemetry fields normalize to None -> ungated)
             "ttft_p99": (r["ttft_p99_ms"] / ref["ttft_p99_ms"]
-                         if r.get("ttft_p99_ms", 0) > 0
-                         and ref.get("ttft_p99_ms", 0) > 0 else None),
+                         if r.get("ttft_p99_ms") and ref.get("ttft_p99_ms")
+                         else None),
         }
     return out
 
@@ -112,15 +124,28 @@ def check_serving(base: dict, fresh_runs: list[dict], tol: float,
         frs = [fn[key] for fn in fnorms if key in fn]
         if not frs:
             continue
-        # ---- deterministic counters: hard gate ----
+        # ---- deterministic counters: hard gate (None on either side =
+        # the counter predates that file -> ungated, never a crash) ----
         syncs = _median([fr["syncs"] for fr in frs])
-        if syncs > br["syncs"] * 1.05 + 1e-9:
+        if br["syncs"] is not None and syncs is not None \
+                and syncs > br["syncs"] * 1.05 + 1e-9:
             fails.append(f"serving {key}: syncs_per_token regressed "
                          f"{br['syncs']:.3f} -> {syncs:.3f}")
         tokens = _median([fr["tokens"] for fr in frs])
-        if tokens != br["tokens"]:
+        if br["tokens"] is not None and tokens is not None \
+                and tokens != br["tokens"]:
             fails.append(f"serving {key}: emitted tokens changed "
                          f"{br['tokens']} -> {tokens} (trajectory change)")
+        # robustness counters are deterministic under the seeded trace:
+        # exact match when both sides report them
+        for cname, label in (("aborted", "aborted requests"),
+                             ("faults", "faults_injected")):
+            if br.get(cname) is None:
+                continue
+            cval = _median([fr.get(cname) for fr in frs])
+            if cval is not None and cval != br[cname]:
+                fails.append(f"serving {key}: {label} changed "
+                             f"{br[cname]} -> {cval}")
         # speculative rows: mean accept length is a function of the code
         # and the seeded trace alone (the oracle draft proposes the
         # target's own greedy tokens), so any drop means the draft pool,
@@ -138,7 +163,8 @@ def check_serving(base: dict, fresh_runs: list[dict], tol: float,
         # their decode wall is pure jitter, so throughput there is
         # advisory and the gate leans on TTFT + counters instead)
         thr = _median([fr["thr"] for fr in frs])
-        if thr < br["thr"] * (1 - tol):
+        if br["thr"] is not None and thr is not None \
+                and thr < br["thr"] * (1 - tol):
             msg = (f"serving {key}: normalized decode_tok_s regressed "
                    f"{br['thr']:.3f} -> {thr:.3f} (>{tol:.0%})")
             if key[1] == "decode":
@@ -161,11 +187,13 @@ def check_serving(base: dict, fresh_runs: list[dict], tol: float,
                          f"(>{2 * tol:.0%})")
         if absolute:
             athr = _median([fr["abs_thr"] for fr in frs])
-            if athr < br["abs_thr"] * (1 - tol):
+            if br["abs_thr"] is not None and athr is not None \
+                    and athr < br["abs_thr"] * (1 - tol):
                 fails.append(f"serving {key}: absolute decode_tok_s "
                              f"regressed {br['abs_thr']:.0f} -> {athr:.0f}")
             attft = _median([fr["abs_ttft"] for fr in frs])
-            if br["abs_ttft"] > 0 and attft > br["abs_ttft"] * (1 + tol):
+            if br["abs_ttft"] and attft is not None \
+                    and attft > br["abs_ttft"] * (1 + tol):
                 fails.append(f"serving {key}: absolute ttft_ms regressed "
                              f"{br['abs_ttft']:.1f} -> {attft:.1f}")
     return fails

@@ -177,6 +177,11 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
             "device_syncs": syncs,
             "syncs_per_token": syncs / max(1, dtoks),
             "tokens": toks, "wall_s": dt,
+            # robustness counters: deterministic under the seeded trace
+            # (both must stay 0 on the clean bench — the regression gate
+            # hard-fails an unexpected abort or injection)
+            "aborted": len(eng.aborted),
+            "faults_injected": eng.faults.total_fired,
             "outputs": {k: list(v) for k, v in outs.items()}}
 
 

@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.allocator import PageAllocator
+from repro.runtime.faults import NULL_FAULTS
 
 
 @dataclass
@@ -70,6 +71,11 @@ class SchedulerStats:
     admitted: int = 0
     preempted: int = 0
     dedup_deferred: int = 0
+    # lifecycle-hardening counters (PR 8): requests torn down before their
+    # natural finish (client abort / deadline / quarantine / load shed) and
+    # requests drained off a dead serving row into re-queued prefills.
+    aborted: int = 0
+    migrated: int = 0
     batch_trace: list = field(default_factory=list)
 
     @property
@@ -104,6 +110,11 @@ class ContinuousBatcher:
         # mirroring the kvcache swap story) and completion (finished=True:
         # the engine drops any stored snapshot).
         self.rstate_hook = None
+        # fault injection (repro.runtime.faults): the engine threads its
+        # injector here so the scheduler can model allocator exhaustion
+        # deterministically. NULL_FAULTS is the shared disabled no-op —
+        # one bool attribute check per growth step.
+        self.faults = NULL_FAULTS
         # per-tick memo of (tokens, dev_pages, host_pages) per queued
         # candidate: can_admit's capacity estimate and the dedup check
         # share one token materialization + tree walk. ``prefetch_peeks``
@@ -237,6 +248,74 @@ class ContinuousBatcher:
         self._ctx[s] = req.total_len
         self.dirty.add(s)
         return True
+
+    # ---- lifecycle hardening (PR 8) ----------------------------------
+    def abort_slot(self, s: int, reason: str = "abort") -> Request:
+        """Tear down a RUNNING request without a finish: its output is
+        abandoned, so its written KV is NOT inserted into the prefix cache
+        (already-shared prefix pages survive through the tree's own refs).
+        Releases radix pins + pending swap ops (``cache.release`` →
+        ``ops.cancel``) and frees the pages. Must only be called at a
+        quiescent point — no decode horizon in flight over this slot's
+        pages (the engine's ``_process_faults`` safe point)."""
+        req = self.slots[s]
+        if self.rstate_hook is not None:
+            self.rstate_hook(req, s, True)   # drop any carry snapshot
+        if self.cache is not None:
+            self.cache.release(req.req_id)
+        self.alloc.free(req.req_id)
+        self.slots[s] = None
+        self._snap_clear(s)
+        self.stats.aborted += 1
+        ev = getattr(self.events, "on_abort", None)
+        if ev is not None:
+            ev(req, s, reason)
+        return req
+
+    def abort_queued(self, req: Request, reason: str = "abort") -> None:
+        """Drop a request still in the waiting queue. Queued requests hold
+        no allocator or cache state (lookup/commit happen at admission, and
+        preemption released everything before requeueing), so this is pure
+        bookkeeping."""
+        self.queue.remove(req)
+        self._peek_memo.pop(req.req_id, None)
+        self.stats.aborted += 1
+        ev = getattr(self.events, "on_abort", None)
+        if ev is not None:
+            ev(req, -1, reason)
+
+    def drain_slot(self, s: int) -> Request:
+        """A serving row died under this slot: its written KV is garbage,
+        so the request re-queues for a full re-prefill of the
+        reconstructable context and the pages are freed WITHOUT a cache
+        insert. Called at the engine's post-collect quiescent point, where
+        ``generated`` counts only really-emitted tokens — so the written
+        context is exactly ``total_len`` tokens (prompt + every consumed
+        decode input; the newest sample re-enters as the first decode input
+        after re-prefill) and the remaining budget is ``max_new -
+        generated`` (unlike ``_preempt``'s mid-tick ``- generated + 1``
+        frame, where ``generated`` was pre-incremented for an unsampled
+        token)."""
+        req = self.slots[s]
+        if self.rstate_hook is not None:
+            self.rstate_hook(req, s, True)   # carry snapshot is lost too
+        if req.generated:
+            req.prompt_len = req.total_len
+            req.max_new_tokens = max(1, req.max_new_tokens - req.generated)
+        req.generated = 0
+        req.prefill_done = not req.chunked_prefill
+        req.cached_len = 0
+        req.kv_written = False
+        if self.cache is not None:
+            self.cache.release(req.req_id)
+        self.alloc.free(req.req_id)
+        self.queue.appendleft(req)
+        self.slots[s] = None
+        self._snap_clear(s)
+        self.stats.migrated += 1
+        if self.events is not None:
+            self.events.on_preempt(req, s)
+        return req
 
     def reserve_horizon(self, active, k: int, *,
                         gentle: bool = False) -> np.ndarray:
@@ -440,6 +519,13 @@ class ContinuousBatcher:
                 continue
             req.generated += 1
             self._ctx[s] = req.total_len
+            # injected pool exhaustion: behave exactly as if ensure() had
+            # raised — same preempt path, same requeue arithmetic — so the
+            # chaos plan exercises the real recovery machinery
+            if self.faults.enabled and self.faults.fire("alloc_exhaust",
+                                                        key=req.req_id):
+                self._preempt(s, req)
+                continue
             if req.total_len <= self.max_context:
                 try:
                     self._snap_grow(s, self.alloc.ensure(req.req_id,

@@ -32,6 +32,7 @@ import numpy as np
 from repro.kvcache.offload import DeviceOpQueue, HostTier
 from repro.kvcache.policy import EvictionPolicy, make_cache_policy
 from repro.kvcache.radix import RadixNode, RadixTree
+from repro.runtime.faults import NULL_FAULTS
 
 
 @dataclass
@@ -61,6 +62,7 @@ class CacheStats:
     inserted_pages: int = 0
     evicted_pages: int = 0              # dropped from device (incl. offloads)
     reclaims: int = 0                   # on-demand reclaim calls
+    swap_in_fails: int = 0              # refused swap-ins (real or injected)
 
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -80,6 +82,9 @@ class PrefixCache:
         # engine's *current* functional pool at dispatch time
         self.pool_ref = pool_ref
         self.stats = CacheStats()
+        # fault injection (repro.runtime.faults): the engine threads its
+        # injector here so swap-tier refusal is deterministically replayable
+        self.faults = NULL_FAULTS
         self._hits: dict[int, CacheHit] = {}
         # reclaimable() is consulted by every can_admit (once per queued
         # candidate per tick): memoize the tree walk and invalidate on any
@@ -226,15 +231,53 @@ class PrefixCache:
     # capacity tier: eviction / offload / reclaim
     # ------------------------------------------------------------------
     def _swap_in(self, node: RadixNode) -> bool:
-        """Bring an offloaded node's payload back onto device pages."""
+        """Bring an offloaded node's payload back onto device pages. A
+        refusal (real pool exhaustion, injected swap failure, or a dropped
+        tier) truncates the caller's match at the last materializable node
+        — prefill covers the rest, so refusal costs recompute, never
+        correctness."""
+        if self.host is None:               # tier dropped (degradation)
+            return False
+        if self.faults.enabled and self.faults.fire(
+                "swap_fail", key=self.stats.lookups):
+            self.stats.swap_in_fails += 1
+            return False
         try:
             pages = self.alloc.alloc_pages(node.n_pages)
         except MemoryError:
+            self.stats.swap_in_fails += 1
             return False
         data = self.host.take(node)
         node.pages = pages
         self.ops.queue_scatter(pages, data["k"], data["v"])
         return True
+
+    def drop_host_tier(self) -> int:
+        """Degradation: abandon the host offload tier after repeated swap
+        failures. Unpinned host-resident nodes are discarded and removed
+        from the tree (their payloads were cold copies — the engine can
+        always recompute them from tokens); the tier handle goes to None so
+        ``maintain()`` stops offloading and ``_swap_in`` refuses, turning
+        every future host hit into a plain miss. Still-pinned or inner
+        host-resident nodes stay in the tree with their dead payload; a
+        walk that reaches one refuses to materialize it and truncates
+        there (the lookup's existing fallback). Returns nodes dropped."""
+        if self.host is None:
+            return 0
+        self._mutated()
+        self.host.drain()
+        n = 0
+        while True:                         # removal is leaf-only; peel
+            cands = [c for c in self.tree.nodes()
+                     if c.on_host and c.ref == 0 and c.is_leaf]
+            if not cands:
+                break
+            for node in cands:
+                self.host.discard(node)
+                self.tree.remove(node)
+                n += 1
+        self.host = None
+        return n
 
     def _make_host_room(self, n_pages: int) -> None:
         """Tier eviction: discard the coldest unpinned host-resident leaves

@@ -82,8 +82,28 @@ def build_engine(args, telemetry=None) -> DecodeEngine:
                         spec_horizon=args.spec_horizon,
                         reserve_gentle=args.reserve_gentle,
                         state_resume=not args.no_state_resume,
-                        telemetry=telemetry)
+                        telemetry=telemetry,
+                        faults=make_serve_faults(args),
+                        max_queue=args.max_queue,
+                        default_deadline_s=args.deadline,
+                        degrade_after=args.degrade_after,
+                        nan_guard=True if args.nan_guard else None,
+                        snapshot_dir=args.snapshot_dir or None,
+                        snapshot_every=args.snapshot_every)
     return DecodeEngine(cfg, ecfg)
+
+
+def make_serve_faults(args):
+    """FaultConfig from the --fault-* flags; None when no probability is
+    set (the engine keeps the shared no-op injector)."""
+    ps = dict(alloc_exhaust_p=args.fault_alloc, swap_fail_p=args.fault_swap,
+              row_death_p=args.fault_row_death, nan_logits_p=args.fault_nan,
+              slow_tick_p=args.fault_slow_tick,
+              client_abort_p=args.fault_abort)
+    if not any(ps.values()):
+        return None
+    from repro.runtime.faults import FaultConfig
+    return FaultConfig(seed=args.fault_seed, **ps)
 
 
 def submit_trace(eng: DecodeEngine, args) -> None:
@@ -175,6 +195,39 @@ def main(argv=None):
     ap.add_argument("--stats-every", type=float, default=0.0,
                     help="print a telemetry stats line every S seconds "
                          "while serving (0 = off)")
+    # ---- robustness (docs/robustness.md) ----
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: load-shed beyond this "
+                         "many waiting requests (0 = unbounded)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="default per-request wall-clock deadline in "
+                         "seconds; expired requests are torn down at the "
+                         "next tick (0 = none)")
+    ap.add_argument("--degrade-after", type=int, default=3,
+                    help="fault events before the degradation ladder "
+                         "downgrades a tier (spec off, horizon 1, host "
+                         "tier dropped); 0 disables")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="quarantine requests whose logits/sampled ids go "
+                         "non-finite or out of range (auto-armed when "
+                         "fault injection is on)")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="write crash-consistent serving snapshots here")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot cadence in engine ticks (0 = off)")
+    ap.add_argument("--restore", action="store_true",
+                    help="restore the latest snapshot from --snapshot-dir "
+                         "before serving (resumes in-flight requests)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault injector")
+    for flag, kind in (("--fault-alloc", "page-pool exhaustion"),
+                       ("--fault-swap", "host swap-in failure"),
+                       ("--fault-row-death", "serving-row death"),
+                       ("--fault-nan", "NaN-logits quarantine"),
+                       ("--fault-slow-tick", "straggler tick"),
+                       ("--fault-abort", "client abort")):
+        ap.add_argument(flag, type=float, default=0.0,
+                        help=f"per-decision injection probability: {kind}")
     args = ap.parse_args(argv)
 
     tel = make_serve_telemetry(args)
@@ -194,7 +247,14 @@ def main(argv=None):
 
         threading.Thread(target=_ticker, name="stats-line",
                          daemon=True).start()
-    submit_trace(eng, args)
+    if args.restore and args.snapshot_dir:
+        step = eng.restore_snapshot()
+        print(f"[serve] restored snapshot step={step} from "
+              f"{args.snapshot_dir}" if step is not None else
+              f"[serve] no snapshot in {args.snapshot_dir}; cold start",
+              flush=True)
+    else:
+        submit_trace(eng, args)
 
     t0 = time.time()
     eng.run(100_000)
@@ -223,6 +283,12 @@ def main(argv=None):
         print(f"[serve] spec: draft={args.draft} rounds={eng.spec_rounds} "
               f"accepted={eng.spec_accepted}/{eng.spec_proposed} "
               f"accept_len_mean={acc:.2f}", flush=True)
+    if eng.faults.enabled or eng.aborted or eng.degraded_mode \
+            or eng.snapshot_saves:
+        print(f"[serve] robustness: aborted={len(eng.aborted)} "
+              f"{dict(eng.abort_counts)} faults={eng.faults.total_fired} "
+              f"migrated={st.migrated} degraded_mode={eng.degraded_mode} "
+              f"snapshots={eng.snapshot_saves}", flush=True)
     if eng.cache is not None:
         cs = eng.cache.stats_dict()
         print(f"[serve] kvcache: hits={cs['hits']}/{cs['lookups']} "

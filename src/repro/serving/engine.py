@@ -138,6 +138,46 @@ class EngineConfig:
     # registry / per-request tracing / Perfetto tick timeline; all of it is
     # host-side bookkeeping riding the existing horizon readback.
     telemetry: Any = None
+    # ---- fault injection (repro.runtime.faults) ----
+    # None (default) = the shared no-op injector: fire() short-circuits on
+    # one bool check, outputs and device-sync count are bit-identical to a
+    # build without the subsystem. A FaultConfig (or a live FaultInjector,
+    # e.g. shared across engines by a chaos driver) arms the seeded plan:
+    # allocator exhaustion, swap-tier failure/stall, serving-row death,
+    # NaN logits, slow ticks, client aborts — all replayable from the seed.
+    faults: Any = None
+    # ---- request lifecycle hardening ----
+    # bounded admission queue: submit() load-sheds (terminal, reason
+    # "shed") once this many requests are waiting. 0 = unbounded (seed
+    # behavior).
+    max_queue: int = 0
+    # per-request wall-clock deadline applied when submit() is not given
+    # one explicitly; 0 = none. Expired requests are torn down at the next
+    # tick's safe point wherever they are (queued, prefilling, decoding).
+    default_deadline_s: float = 0.0
+    # ---- graceful degradation ----
+    # faults observed (injected pressure, repeated swap failures, NaN
+    # quarantines) before the engine downgrades a tier: spec decoding ->
+    # plain fused decode, horizon -> 1, offload tier -> device-only.
+    # Sticky bits land in DecodeEngine.degraded_mode. 0 disables the
+    # ladder.
+    degrade_after: int = 3
+    # ---- crash-consistent serving snapshots ----
+    # snapshot_every > 0: every N ticks run() writes a serving checkpoint
+    # (scheduler + slot + written-KV + recurrent-carry state) under
+    # snapshot_dir using the manifest-gated runtime/checkpoint.py layout;
+    # restore_snapshot() on a fresh engine resumes and finishes in-flight
+    # requests token-identically (greedy).
+    snapshot_dir: str | None = None
+    snapshot_every: int = 0
+    snapshot_keep: int = 3
+    # Real-logits NaN quarantine. None (auto) arms it together with fault
+    # injection; True forces it on for hardened deployments. Off by
+    # default because greedy argmax over a non-finite row is still
+    # deterministic — callers that feed garbage ids (e.g. stress tests
+    # with out-of-vocab prompts) keep the pre-hardening sample-as-is
+    # behavior unless they opt in.
+    nan_guard: bool | None = None
 
 
 @dataclass
@@ -364,6 +404,34 @@ class DecodeEngine:
             self.spec_rounds = 0        # verify passes over running slots
             self.spec_proposed = 0      # draft tokens offered
             self.spec_accepted = 0      # draft tokens accepted
+        # ---- fault injection + request lifecycle hardening (PR 8) ----
+        # one injector threaded through scheduler and cache so every
+        # subsystem's injection decisions share the seeded plan
+        from repro.runtime.faults import make_faults
+        self.faults = make_faults(ecfg.faults)
+        self.nan_guard = (self.faults.enabled if ecfg.nan_guard is None
+                          else ecfg.nan_guard)
+        self.batcher.faults = self.faults
+        if self.cache is not None:
+            self.cache.faults = self.faults
+        # terminal-but-not-finished requests: req_id -> reason
+        # (client / deadline / nan / shed / chaos)
+        self.aborted: dict[int, str] = {}
+        self.abort_counts: dict[str, int] = {
+            "client": 0, "deadline": 0, "nan": 0, "shed": 0, "chaos": 0}
+        # aborts requested mid-tick; torn down at the next safe point (a
+        # teardown while a horizon is in flight would free pages its KV
+        # writes still target — re-admitted, they'd be corrupted)
+        self._abort_req: dict[int, str] = {}
+        # req_id -> absolute wall-clock deadline (perf_counter frame)
+        self.deadline_t: dict[int, float] = {}
+        # sticky degradation bitmask: 1 = horizon->1, 2 = spec off,
+        # 4 = host tier dropped
+        self.degraded_mode = 0
+        # serving snapshot bookkeeping (save_snapshot / restore_snapshot)
+        self.snapshot_saves = 0
+        self.snapshot_restores = 0
+        self._tick_no = 0
         # ---- telemetry (must come last: bindings read everything above).
         # Disabled -> the shared NULL facade; the scheduler's events hook
         # stays None and every tel.* call below is a bound no-op.
@@ -397,17 +465,46 @@ class DecodeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req_id: int, prompt: np.ndarray,
-               max_new_tokens: int) -> None:
+               max_new_tokens: int, *,
+               deadline_s: float | None = None) -> bool:
+        """Enqueue a request. Returns False when the bounded queue is full
+        and the request was load-shed instead (terminal immediately, reason
+        ``shed``, empty output). ``deadline_s`` (or the engine default)
+        arms a wall-clock deadline; an expired request is torn down at the
+        next tick wherever it is in its lifecycle."""
         self.prompts[req_id] = np.asarray(prompt, np.int32)
         self.outputs[req_id] = []
         self.submit_t[req_id] = time.perf_counter()
         self.tel.on_submit(req_id, len(prompt), max_new_tokens,
                            self.submit_t[req_id])
         req = Request(req_id, len(prompt), max_new_tokens)
+        E = self.ecfg
+        if E.max_queue and len(self.batcher.queue) >= E.max_queue:
+            self.aborted[req_id] = "shed"
+            self.abort_counts["shed"] += 1
+            self.tel.on_abort(req, -1, "shed")
+            return False
+        dl = E.default_deadline_s if deadline_s is None else deadline_s
+        if dl and dl > 0:
+            self.deadline_t[req_id] = self.submit_t[req_id] + dl
         if self.prefiller.name == "chunked":
             req.chunked_prefill = True
             req.prefill_done = False
         self.batcher.submit(req)
+        return True
+
+    def abort(self, req_id: int, reason: str = "client") -> bool:
+        """Client-side cancel. The teardown is DEFERRED to the next tick's
+        safe point (post-collect quiescence): freeing a slot's pages while
+        a decode horizon is still in flight would let its KV writes land in
+        pages a re-admission now owns. Returns True if the request was
+        live (queued or running) when the abort was recorded."""
+        live = any(r is not None and r.req_id == req_id
+                   for r in self.batcher.slots) \
+            or any(r.req_id == req_id for r in self.batcher.queue)
+        if live:
+            self._abort_req.setdefault(req_id, reason)
+        return live
 
     # ---- helpers shared with the prefillers ---------------------------
     def _prompt_seq(self, req) -> tuple[np.ndarray, bool]:
@@ -617,6 +714,152 @@ class DecodeEngine:
                 self.state, np.asarray(slots, np.int32),
                 MDL.rstate_entries(gstate))
 
+    # ---- fault processing + terminal teardown (the tick safe point) ----
+    def _find_request(self, req_id: int):
+        """``(slot, req)`` for a running request, ``(None, req)`` for a
+        queued one, ``(None, None)`` when the id is not live."""
+        for s, r in enumerate(self.batcher.slots):
+            if r is not None and r.req_id == req_id:
+                return s, r
+        for r in self.batcher.queue:
+            if r.req_id == req_id:
+                return None, r
+        return None, None
+
+    def _teardown(self, req_id: int, reason: str) -> bool:
+        """Terminal teardown of a live request: scheduler state (pages,
+        pins, pending swap ops) via abort_slot/abort_queued, then every
+        engine-side reference — carry snapshots, draft-pool coverage,
+        deadline tracking. Zero leaks is the contract the robustness tests
+        assert at drain."""
+        s, req = self._find_request(req_id)
+        if req is None:
+            return False
+        if s is not None:
+            self.batcher.abort_slot(s, reason)
+        else:
+            self.batcher.abort_queued(req, reason)
+        self.rsnaps.pop(req_id, None)
+        if self._dstate is not None:
+            self._dlen.pop(req_id, None)
+        self.deadline_t.pop(req_id, None)
+        self.aborted[req_id] = reason
+        self.abort_counts[reason] = self.abort_counts.get(reason, 0) + 1
+        return True
+
+    def _process_row_death(self, finished) -> None:
+        """Injected serving-row death: every non-finishing request whose
+        pages live on a dead row (physical row under ``row_affine``
+        placement, the slot's logical row group under striped) is drained —
+        KV on a dead row is garbage, so ``drain_slot`` frees without a
+        cache insert and requeues for a full re-prefill of the
+        reconstructable context (``elastic.plan_request_migration`` picks
+        the victims)."""
+        E = self.ecfg
+        dead = {row for row in range(max(1, E.n_rows))
+                if self.faults.fire("row_death", key=row)}
+        if not dead:
+            return
+        from repro.runtime.elastic import plan_request_migration
+        row_of: dict[int, int] = {}
+        slot_of: dict[int, int] = {}
+        for s, r in enumerate(self.batcher.slots):
+            if r is None or (finished is not None and finished[s]):
+                continue                # finishing this tick: output is done
+            row = self.alloc.row_of_request(r.req_id)
+            if row is None:             # striped: logical serving rows
+                row = self.batcher._row_of_slot(s)
+            row_of[r.req_id] = row
+            slot_of[r.req_id] = s
+        for rid in plan_request_migration(row_of, dead):
+            s = slot_of[rid]
+            req = self.batcher.slots[s]
+            out = self.outputs[rid]
+            if req.prefill_done and out:
+                # normalize to the really-emitted frame before the requeue
+                # arithmetic (a zero-emission horizon can leave
+                # ``generated`` pre-incremented for an unsampled token)
+                P = len(self.prompts[rid])
+                req.generated = min(
+                    req.generated,
+                    max(0, len(out) - 1 - (req.prompt_len - P)))
+            else:
+                req.generated = 0
+            self.batcher.drain_slot(s)
+            self.rsnaps.pop(rid, None)
+            if self._dstate is not None:
+                self._dlen.pop(rid, None)
+
+    def _update_degradation(self) -> None:
+        """Sticky degradation ladder, driven ONLY by injected pressure and
+        real fault observations (never by ordinary preemption — a healthy
+        loaded engine must keep its exact perf profile): at degrade_after
+        faults, drop speculative decoding (or the horizon, draft-less); at
+        2x, the horizon too; repeated swap-tier failures drop the host
+        tier (cached host pages invalidated, device-only from then on)."""
+        E = self.ecfg
+        if not E.degrade_after:
+            return
+        inj = self.faults.counts
+        pressure = (inj.get("alloc_exhaust", 0) + inj.get("row_death", 0)
+                    + self.abort_counts.get("nan", 0))
+        if pressure >= E.degrade_after:
+            if self._dstate is not None:
+                self.degraded_mode |= 2
+            else:
+                self.degraded_mode |= 1
+        if pressure >= 2 * E.degrade_after:
+            self.degraded_mode |= 1
+        if (self.cache is not None and self.cache.host is not None
+                and self.cache.stats.swap_in_fails >= E.degrade_after):
+            self.cache.drop_host_tier()
+            self.degraded_mode |= 4
+
+    def _process_faults(self, finished) -> None:
+        """The tick's SAFE POINT: post-collect quiescence (no horizon in
+        flight, ``generated`` counts only really-emitted tokens for every
+        slot that emitted), before the scheduler reuses anything. Advances
+        the fault clock, injects this tick's plan (straggler sleeps,
+        seeded client aborts, row deaths), expires deadlines, tears down
+        every requested abort, and updates the degradation ladder.
+        ``finished`` is the tick's natural-finish mask — a finish beats a
+        same-tick abort (the output is already complete), except NaN
+        quarantine, whose tokens are invalid by definition."""
+        self._tick_no += 1
+        F = self.faults
+        F.on_tick()
+        if F.enabled:
+            if F.fire("slow_tick"):
+                time.sleep(F.cfg.slow_tick_s)
+            live = [r for r in self.batcher.slots if r is not None] \
+                + list(self.batcher.queue)
+            for r in live:
+                if F.fire("client_abort", key=r.req_id):
+                    self._abort_req.setdefault(r.req_id, "chaos")
+            self._process_row_death(finished)
+        if self.deadline_t:
+            now = time.perf_counter()
+            for rid, t in list(self.deadline_t.items()):
+                s, req = self._find_request(rid)
+                if req is None or (s is not None and finished is not None
+                                   and finished[s]):
+                    # terminal, or finishing this very tick (the natural
+                    # finish beats a same-tick expiry): stop tracking
+                    self.deadline_t.pop(rid)
+                elif now >= t:
+                    self._abort_req.setdefault(rid, "deadline")
+        if self._abort_req:
+            for rid, reason in list(self._abort_req.items()):
+                s, req = self._find_request(rid)
+                if req is None:
+                    continue               # already terminal
+                if s is not None and finished is not None and finished[s] \
+                        and reason != "nan":
+                    continue               # natural finish this tick wins
+                self._teardown(rid, reason)
+            self._abort_req.clear()
+        self._update_degradation()
+
     # ------------------------------------------------------------------
     def step(self, finished_mask=None):
         """One per-token engine tick: schedule -> prefill -> decode ->
@@ -635,13 +878,17 @@ class DecodeEngine:
                 finished_mask = self._pending_fin if finished_mask is None \
                     else (np.asarray(finished_mask, bool) | self._pending_fin)
                 self._pending_fin = None
+            self._process_faults(finished_mask)
             admitted, active = self.batcher.step(finished_mask)
             if self.cache is not None:
                 # drain last tick's swap-outs + watermark offload
                 # (ping-pong), then replay queued device ops (swap-in
                 # scatters, CoW copies) so prefill and decode read fully
-                # materialized pages
-                self.cache.maintain()
+                # materialized pages — unless an injected swap-tier stall
+                # skips the drain for this tick
+                if not (self.faults.enabled
+                        and self.faults.fire("swap_stall")):
+                    self.cache.maintain()
                 if self.cache.has_pending:
                     self.state["pool"] = self.cache.apply_pending(
                         self.state["pool"])
@@ -705,21 +952,38 @@ class DecodeEngine:
 
         # ---- EOS / budget bookkeeping, vectorized ----------------------
         with self._phase("host_s", "host", "bookkeep"):
+            # invalid-logits quarantine (this path sees the real host
+            # logits): a non-finite row — or an injected NaN plan — means
+            # the sample is garbage; the token is not emitted and the
+            # request goes terminal at the next tick's safe point
+            quar = np.zeros((E.n_slots,), bool)
+            finite = (np.isfinite(logits[active]).all(axis=1)
+                      if self.nan_guard
+                      else np.ones((len(active),), bool))
+            for i, s in enumerate(active):
+                rid = self.batcher.slots[s].req_id
+                if (self.faults.enabled
+                        and self.faults.fire("nan_logits", key=rid)) \
+                        or not finite[i]:
+                    quar[s] = True
+                    self._abort_req.setdefault(rid, "nan")
             gen = np.asarray([0 if r is None else r.generated
                               for r in self.batcher.slots], np.int32)
             budget = np.asarray([1 if r is None else r.max_new_tokens
                                  for r in self.batcher.slots], np.int32)
-            self.tokens = np.where(active_mask, nxt,
+            self.tokens = np.where(active_mask & ~quar, nxt,
                                    self.tokens).astype(np.int32)
-            finished = active_mask & ((nxt == E.eos_token) | (gen >= budget))
-            for s in active:
+            finished = active_mask & ~quar \
+                & ((nxt == E.eos_token) | (gen >= budget))
+            emitted = [s for s in active if not quar[s]]
+            for s in emitted:
                 self.outputs[self.batcher.slots[s].req_id].append(int(nxt[s]))
-            self.timing.decode_tokens += len(active)
+            self.timing.decode_tokens += len(emitted)
             if self.tel.enabled:
                 tnow = time.perf_counter()
-                for s in active:
+                for s in emitted:
                     self.tel.on_tokens(self.batcher.slots[s].req_id, 1, tnow)
-                self.tel.on_horizon(float(ctx[active].sum()))
+                self.tel.on_horizon(float(ctx[emitted].sum()))
             # the device slot mirror did not see this host-side advance; a
             # later fused run() must re-upload these rows (and process this
             # mask)
@@ -917,6 +1181,18 @@ class DecodeEngine:
             ts = toks[emit[:, slot], slot]
             if not len(ts):            # pool-starved to zero steps
                 continue
+            # invalid-logits quarantine: an injected NaN plan, or sampled
+            # ids outside the logits width (the fused path cannot see the
+            # device-side logits, so garbage shows up as out-of-range ids).
+            # The horizon's tokens are NOT folded — the request goes
+            # terminal at this tick's safe point with reason "nan"
+            if (self.faults.enabled
+                    and self.faults.fire("nan_logits", key=req.req_id)) \
+                    or (self.nan_guard
+                        and (int(ts.min()) < 0
+                             or int(ts.max()) >= self.cfg.padded_vocab)):
+                self._abort_req.setdefault(req.req_id, "nan")
+                continue
             self.outputs[req.req_id].extend(int(t) for t in ts)
             self.first_tok_t.setdefault(req.req_id, tnow)
             if tel:
@@ -961,7 +1237,12 @@ class DecodeEngine:
         # ---- overlap window: result-independent host work --------------
         with self._phase("host_s", "host", "overlap"):
             if self.cache is not None:
-                self.cache.maintain()
+                # an injected swap-tier stall skips the maintenance drain
+                # for the tick — pending swap-outs queue up, exactly the
+                # back-pressure a stalled host DMA engine produces
+                if not (self.faults.enabled
+                        and self.faults.fire("swap_stall")):
+                    self.cache.maintain()
             self._drain_snapshots()
             if self._inflight is not None and self.batcher.queue:
                 self.batcher.prefetch_peeks(limit=2 * E.n_slots)
@@ -970,6 +1251,10 @@ class DecodeEngine:
         finished = self._collect_horizon()
         if finished is None:
             finished, self._pending_fin = self._pending_fin, None
+
+        # ---- safe point: injection, deadlines, aborts, degradation -----
+        with self._phase("host_s", "host", "faults"):
+            self._process_faults(finished)
 
         # ---- schedule + prefill ----------------------------------------
         with self._phase("host_s", "host", "schedule"):
@@ -989,7 +1274,10 @@ class DecodeEngine:
 
         # ---- horizon reservation + incremental config update -----------
         with self._phase("host_s", "host", "config"):
-            spec = self._dstate is not None
+            # degradation bit 2 demotes speculative decode to the plain
+            # fused scan (draft state parks; _dlen goes stale but is only
+            # consulted behind ``spec``)
+            spec = self._dstate is not None and not (self.degraded_mode & 2)
             if spec:
                 # the draft must re-absorb any context it did not write —
                 # every (re)admission starts from zero (swap-in / CoW /
@@ -1002,6 +1290,8 @@ class DecodeEngine:
             cap = self.prefiller.max_horizon
             if cap is not None:
                 K = min(K, cap)
+            if (self.degraded_mode & 1) and not spec:
+                K = 1              # bit 1: per-token trajectory, no reserve
             allow = self.batcher.reserve_horizon(active, K,
                                                  gentle=E.reserve_gentle)
             self._sync_device_slots()
@@ -1035,11 +1325,195 @@ class DecodeEngine:
                                    for s in active],
                                   None)
 
+    def tick(self) -> None:
+        """One pipelined fused tick plus the serving-snapshot cadence
+        (public driver API; chaos drivers call this instead of run() so
+        they can kill the engine between ticks)."""
+        self._step_fused()
+        E = self.ecfg
+        if E.snapshot_every and E.snapshot_dir \
+                and self._tick_no % E.snapshot_every == 0:
+            self.save_snapshot()
+
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
         for _ in range(max_steps):
             if self._inflight is None and self.batcher.done():
                 break
-            self._step_fused()
+            self.tick()
         if self._inflight is not None:   # max_steps hit mid-horizon
             self._pending_fin = self._collect_horizon()
         return self.outputs
+
+    # ---- crash-consistent serving snapshots ---------------------------
+    def _snapshot_entry(self, req, s: int | None):
+        """(scalar-manifest entry, array dict) for one live request.
+        Running warm slots save their written KV pages (and recurrent
+        carry) at the quiescent depth; the requeue arithmetic mirrors
+        ``drain_slot`` — saved ``prompt_len`` equals the restore depth, so
+        a warm restore rides the prefiller's full-restore path (no model
+        call) and continues token-identically. Everything else is saved
+        cold: a deterministic re-prefill of the reconstructable context."""
+        E = self.ecfg
+        rid = req.req_id
+        out = self.outputs[rid]
+        arrs: dict[str, Any] = {
+            "prompt": self.prompts[rid],
+            "out": np.asarray(out, np.int32)}
+        ent = {"prompt_len": int(req.prompt_len),
+               "max_new": int(req.max_new_tokens), "state": "cold"}
+        if s is not None and req.prefill_done and out and req.kv_written:
+            P = len(self.prompts[rid])
+            g = min(int(req.generated),
+                    max(0, len(out) - 1 - (req.prompt_len - P)))
+            depth = req.prompt_len + g
+            ent = {"prompt_len": int(depth),
+                   "max_new": max(1, int(req.max_new_tokens) - g),
+                   "state": "warm", "depth": int(depth)}
+            if "pool" in self.state:
+                from repro.core.paged_kv import gather_pages
+                n = -(-depth // E.page_size)
+                pages = np.asarray(self.batcher.block_table_row(s)[:n])
+                k, v = gather_pages(self.state["pool"]["k"],
+                                    self.state["pool"]["v"],
+                                    jnp.asarray(pages))
+                arrs["kv_k"], arrs["kv_v"] = np.asarray(k), np.asarray(v)
+            if self.has_rstate:
+                arrs["rows"] = jax.tree.map(
+                    np.asarray, MDL.gather_rstate(self.state, [s]))
+        elif s is None and req.req_id in self.rsnaps:
+            # queued with a preemption snapshot (already host numpy after
+            # the drain): persist it so the restore resumes, not recomputes
+            snap = self.rsnaps[rid]
+            ent = {"prompt_len": int(req.prompt_len),
+                   "max_new": int(req.max_new_tokens),
+                   "state": "warm", "depth": int(snap["len"])}
+            if "kv" in snap:
+                arrs["kv_k"], arrs["kv_v"] = snap["kv"]
+            if "rows" in snap:
+                arrs["rows"] = snap["rows"]
+        return ent, arrs
+
+    def save_snapshot(self, ckpt_dir=None):
+        """Write a crash-consistent serving checkpoint: every live
+        request's prompt/output tokens plus, for warm slots, the written KV
+        pages and recurrent carry at the quiescent depth — enough for a
+        fresh engine to finish every in-flight request token-identically
+        (greedy). Quiesces the in-flight horizon first (one extra sync on
+        ticks that snapshot); uses the manifest-gated
+        ``runtime/checkpoint.py`` layout, so a crash mid-save can never
+        corrupt the latest restorable step."""
+        E = self.ecfg
+        d = ckpt_dir or E.snapshot_dir
+        if d is None:
+            return None
+        if self._inflight is not None:        # quiesce: fold the horizon
+            fin = self._collect_horizon()
+            if fin is not None:
+                self._pending_fin = fin if self._pending_fin is None \
+                    else (self._pending_fin | fin)
+        self._drain_snapshots()
+        order: list[int] = []
+        ents: dict[str, dict] = {}
+        arrs: dict[str, dict] = {}
+        for s, req in enumerate(self.batcher.slots):
+            if req is None:
+                continue
+            if self._pending_fin is not None and self._pending_fin[s]:
+                ent = {"state": "done", "max_new": int(req.max_new_tokens),
+                       "prompt_len": int(req.prompt_len)}
+                a = {"prompt": self.prompts[req.req_id],
+                     "out": np.asarray(self.outputs[req.req_id], np.int32)}
+            else:
+                ent, a = self._snapshot_entry(req, s)
+            order.append(req.req_id)
+            ents[str(req.req_id)] = ent
+            arrs[str(req.req_id)] = a
+        for req in self.batcher.queue:
+            ent, a = self._snapshot_entry(req, None)
+            order.append(req.req_id)
+            ents[str(req.req_id)] = ent
+            arrs[str(req.req_id)] = a
+        from repro.runtime import checkpoint as CKPT
+        tree = {"reqs": arrs, "dev_key": np.asarray(self.dev.key)}
+        path = CKPT.save(d, self._tick_no, tree,
+                         extra={"order": order, "reqs": ents,
+                                "tick": self._tick_no},
+                         keep=E.snapshot_keep)
+        self.snapshot_saves += 1
+        return path
+
+    def restore_snapshot(self, ckpt_dir=None, step: int | None = None):
+        """Rebuild the serving state of the latest (or given) snapshot into
+        THIS engine — call on a freshly constructed engine with the same
+        model/engine config, then ``run()``: warm requests restore their KV
+        (and carry) and continue mid-stream, cold ones re-prefill
+        deterministically, done ones just republish their outputs. Returns
+        the restored step, or None when no complete snapshot exists."""
+        import json as _json
+        from pathlib import Path as _Path
+        from repro.runtime import checkpoint as CKPT
+        E = self.ecfg
+        d = ckpt_dir or E.snapshot_dir
+        if d is None:
+            return None
+        if step is None:
+            step = CKPT.latest_step(d)
+            if step is None:
+                return None
+        step_dir = _Path(d) / f"step_{step:08d}"
+        extra = _json.loads(
+            (step_dir / "manifest.json").read_text())["extra"]
+        data = np.load(step_dir / "shard_00000.npz")
+        nested: dict = {}
+        for key in data.files:                 # "/"-joined tree paths back
+            parts = key.split("/")             # into per-request dicts
+            dd = nested
+            for p in parts[:-1]:
+                dd = dd.setdefault(p, {})
+            dd[parts[-1]] = data[key]
+        if "dev_key" in nested:
+            self.dev.key = jnp.asarray(nested["dev_key"])
+        reqs = nested.get("reqs", {})
+
+        def _rows_like(nd):
+            # the carry pytree contains tuples/lists the "/"-keyed nesting
+            # flattened to string indices — unflatten against a live
+            # one-slot gather so the structure round-trips exactly
+            like = MDL.gather_rstate(self.state, [0])
+            flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+            leaves = []
+            for path, _leaf in flat:
+                d = nd
+                for p in path:
+                    d = d[str(getattr(p, "key", getattr(p, "idx", p)))]
+                leaves.append(d)
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+        # warm restores ride the preemption-snapshot machinery; slot-mode
+        # prefill is the recompute reference and never consumes snapshots
+        warm_ok = E.state_resume and self.prefiller.name != "slot"
+        for rid_s in map(str, extra["order"]):
+            ent = extra["reqs"][rid_s]
+            rid = int(rid_s)
+            a = reqs.get(rid_s, {})
+            self.prompts[rid] = np.asarray(a["prompt"], np.int32)
+            self.outputs[rid] = [int(t) for t in
+                                 np.asarray(a.get("out", ()), np.int32)]
+            self.submit_t[rid] = time.perf_counter()
+            if ent["state"] == "done":         # finished during quiesce
+                continue
+            self.tel.on_submit(rid, len(self.prompts[rid]),
+                               int(ent["max_new"]), self.submit_t[rid])
+            req = Request(rid, int(ent["prompt_len"]), int(ent["max_new"]))
+            if self.prefiller.name == "chunked":
+                req.chunked_prefill = True
+                req.prefill_done = False
+            if ent["state"] == "warm" and warm_ok:
+                snap: dict[str, Any] = {"len": int(ent["depth"])}
+                if "kv_k" in a:
+                    snap["kv"] = (a["kv_k"], a["kv_v"])
+                if "rows" in a:
+                    snap["rows"] = _rows_like(a["rows"])
+                self.rsnaps[rid] = snap
+            self.batcher.submit(req)
+        self.snapshot_restores += 1
+        return step

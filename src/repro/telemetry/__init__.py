@@ -110,6 +110,37 @@ class Telemetry:
                "recurrent-state preemption snapshots taken", kind="counter")
         r.bind("rstate_restores_total", lambda: engine.rstate_restores,
                "recurrent-state snapshot restores", kind="counter")
+        # ---- robustness namespace (PR 8): aborts / faults / degradation
+        r.bind("sched_aborted_total", lambda: s.aborted,
+               "requests torn down before a natural finish", kind="counter")
+        r.bind("sched_migrated_total", lambda: s.migrated,
+               "requests drained off dead rows into re-queued prefills",
+               kind="counter")
+        ab = engine.abort_counts
+        for reason in ("client", "deadline", "nan", "shed", "chaos"):
+            r.bind("aborts_total", lambda rr=reason: ab.get(rr, 0),
+                   "terminal teardowns by reason", kind="counter",
+                   labels={"reason": reason})
+        r.bind("degraded_mode", lambda: engine.degraded_mode,
+               "sticky degradation bitmask (1=horizon->1, 2=spec off, "
+               "4=host tier dropped)")
+        r.bind("engine_snapshot_saves_total",
+               lambda: engine.snapshot_saves,
+               "crash-consistent serving snapshots written", kind="counter")
+        r.bind("engine_snapshot_restores_total",
+               lambda: engine.snapshot_restores,
+               "engine starts restored from a serving snapshot",
+               kind="counter")
+        if engine.faults.enabled:
+            fc = engine.faults.counts
+            r.bind("faults_injected_total",
+                   lambda: engine.faults.total_fired,
+                   "injected faults across all kinds", kind="counter")
+            from repro.runtime.faults import KINDS
+            for kind in KINDS:
+                r.bind("faults_total", lambda kk=kind: fc.get(kk, 0),
+                       "injected faults by kind", kind="counter",
+                       labels={"kind": kind})
         if engine.draft_cfg is not None:
             r.bind("spec_rounds_total", lambda: engine.spec_rounds,
                    "speculative verify passes", kind="counter")
@@ -132,6 +163,12 @@ class Telemetry:
 
     def on_spec(self, req_id: int, proposed: int, accepted: int) -> None:
         self.tracker.on_spec(req_id, proposed, accepted)
+
+    def on_abort(self, req, slot: int, reason: str) -> None:
+        """Engine-side terminal teardown (load shed happens before the
+        scheduler ever sees the request, so the batcher's events hook
+        can't cover it)."""
+        self.tracker.on_abort(req, slot, reason)
 
     def on_horizon(self, token_ctx_sum: float) -> None:
         """One collected horizon: ``token_ctx_sum`` = sum over emitted
@@ -192,6 +229,9 @@ class _NullTelemetry:
         pass
 
     def on_spec(self, req_id, proposed, accepted) -> None:
+        pass
+
+    def on_abort(self, req, slot, reason) -> None:
         pass
 
     def on_horizon(self, token_ctx_sum) -> None:

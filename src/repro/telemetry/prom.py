@@ -8,8 +8,11 @@ pull bindings read plain python ints/floats, so a concurrent scrape is
 torn-read-safe at worst, never corrupting."""
 from __future__ import annotations
 
+import logging
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+log = logging.getLogger(__name__)
 
 CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
@@ -18,8 +21,12 @@ LAST_SERVER: "MetricsServer | None" = None
 
 
 class MetricsServer:
-    def __init__(self, registry, port: int = 0, host: str = "127.0.0.1"):
+    def __init__(self, registry, port: int = 0, host: str = "127.0.0.1",
+                 scrape_timeout: float = 10.0):
         reg = registry
+        # default urlopen timeout for self-scrapes (tests / CI smoke);
+        # per-call override via scrape(timeout=...)
+        self.scrape_timeout = float(scrape_timeout)
 
         class Handler(BaseHTTPRequestHandler):
             def do_GET(self):                       # noqa: N802 (stdlib API)
@@ -48,14 +55,26 @@ class MetricsServer:
     def url(self) -> str:
         return f"http://{self.httpd.server_address[0]}:{self.port}/metrics"
 
-    def scrape(self) -> str:
+    def scrape(self, timeout: float | None = None) -> str:
         """Fetch the endpoint over real HTTP (tests / CI smoke)."""
         from urllib.request import urlopen
-        with urlopen(self.url, timeout=10) as resp:
+        t = self.scrape_timeout if timeout is None else timeout
+        with urlopen(self.url, timeout=t) as resp:
             assert resp.headers.get("Content-Type") == CONTENT_TYPE
             return resp.read().decode()
 
-    def close(self) -> None:
+    def close(self, join_timeout: float = 5.0) -> bool:
+        """Shut the endpoint down. Returns True once the serving thread has
+        exited; if it is still alive after ``join_timeout`` the leak is
+        REPORTED (warning log) and False is returned instead of being
+        swallowed — the thread is a daemon, so the process can still exit,
+        but a caller that cares (tests, long-lived servers restarting the
+        endpoint) can now see the failure."""
         self.httpd.shutdown()
         self.httpd.server_close()
-        self._thread.join(timeout=5)
+        self._thread.join(timeout=join_timeout)
+        if self._thread.is_alive():
+            log.warning("metrics-http thread still alive %.1fs after "
+                        "shutdown — leaked daemon thread", join_timeout)
+            return False
+        return True

@@ -39,6 +39,10 @@ class RequestRecord:
     spec_accepted: int = 0
     preempt_ts: list = field(default_factory=list)
     finished: bool = False
+    # terminal-but-not-finished: torn down before a natural finish (client
+    # abort / deadline / NaN quarantine / load shed); reason in abort_reason
+    aborted: bool = False
+    abort_reason: str | None = None
 
     # ---- derived latencies (seconds) ----------------------------------
     @property
@@ -102,6 +106,9 @@ class RequestTracker:
                 "request_queue_seconds", "submit -> first admission")
             self.c_finished = r.counter(
                 "requests_finished_total", "requests run to completion")
+            self.c_aborted = r.counter(
+                "requests_aborted_total", "requests torn down before a "
+                "natural finish (abort / deadline / quarantine / shed)")
             self.c_tokens = r.counter(
                 "request_tokens_total", "tokens emitted across all requests")
             r.bind("requests_live", lambda: len(self.live),
@@ -109,7 +116,7 @@ class RequestTracker:
         else:
             from repro.telemetry.registry import _NULL
             self.h_ttft = self.h_tpot = self.h_queue = _NULL
-            self.c_finished = self.c_tokens = _NULL
+            self.c_finished = self.c_tokens = self.c_aborted = _NULL
 
     # ---- engine-side events -------------------------------------------
     def on_submit(self, req_id: int, prompt_len: int, max_new: int,
@@ -163,6 +170,27 @@ class RequestTracker:
         if self.trace is not None:
             self.trace.instant(req.req_id, "preempt", t)
 
+    def on_abort(self, req, slot: int, reason: str = "abort") -> None:
+        """Terminal teardown without a natural finish (scheduler
+        ``abort_slot`` / ``abort_queued``, engine shed). The record is
+        closed and exported like a finish — aborted requests must appear in
+        the JSONL log and summaries, not vanish — but flagged ``aborted``
+        and excluded from the finished counter."""
+        rec = self.live.pop(req.req_id, None)
+        if rec is None:
+            return
+        t = time.perf_counter()
+        rec.aborted = True
+        rec.abort_reason = reason
+        rec.finish_t = t
+        self.records.append(rec)
+        self.c_aborted.inc()
+        if self.trace is not None:
+            self.trace.instant(req.req_id, f"abort:{reason}", t)
+        if self._log is not None:
+            self._log.write(json.dumps(rec.as_dict()) + "\n")
+            self._log.flush()
+
     def on_finish(self, req, slot: int) -> None:
         rec = self.live.pop(req.req_id, None)
         if rec is None:
@@ -195,12 +223,17 @@ class RequestTracker:
 
     # -------------------------------------------------------------------
     def summary(self) -> dict:
-        """Percentile summary over finished records (seconds -> ms)."""
-        recs = self.records
+        """Percentile summary over finished records (seconds -> ms).
+        Aborted records are counted but excluded from the latency
+        percentiles — a request torn down mid-stream has no meaningful
+        TPOT, and including partial TTFTs would skew the SLO numbers a
+        no-abort run reports."""
+        recs = [r for r in self.records if r.finished]
         ttft = [r.ttft_s for r in recs if r.ttft_s is not None]
         tpot = [r.tpot_s for r in recs if r.tpot_s is not None]
         queue = [r.queue_s for r in recs if r.queue_s is not None]
         out = {"finished": len(recs),
+               "aborted": sum(1 for r in self.records if r.aborted),
                "preemptions": sum(r.preemptions for r in recs),
                "tokens": sum(r.tokens for r in recs)}
         for name, vals in (("ttft", ttft), ("tpot", tpot), ("queue", queue)):

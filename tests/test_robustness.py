@@ -1,0 +1,357 @@
+"""Fault-tolerant serving (PR 8): request lifecycle hardening,
+deterministic fault injection, graceful degradation, and crash-consistent
+engine snapshots.
+
+Every test drives the REAL engine (tiny llama / zamba, CPU, greedy) and
+asserts the two robustness contracts:
+
+* **terminal**: every submitted request either completes or lands in
+  ``eng.aborted`` with a reason — nothing hangs or vanishes;
+* **leak-free**: at drain the page allocator is empty and no per-request
+  engine state (carry snapshots, draft-pool coverage, deadline tracking,
+  pending aborts) dangles.
+
+Plus the determinism contracts: an armed-but-silent injector changes
+nothing (bit-identical outputs AND device-sync counts), a chaos run
+replays exactly from its seed, and row-death / kill+restore runs are
+token-identical to clean runs.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model as MDL
+from repro.runtime.faults import (NULL_FAULTS, FaultConfig, FaultInjector,
+                                  make_faults)
+from repro.serving import DecodeEngine, EngineConfig
+
+PAGE = 4
+
+
+def tiny(name="llama3.2-1b", **kw):
+    return replace(reduced(get_config(name)), dtype="float32", **kw)
+
+
+_PARAMS: dict = {}
+
+
+def _params(name="llama3.2-1b"):
+    if name not in _PARAMS:
+        cfg = tiny(name)
+        _PARAMS[name] = (cfg, MDL.init_params(cfg, jax.random.PRNGKey(0),
+                                              jnp.float32))
+    return _PARAMS[name]
+
+
+def _engine(faults=None, arch="llama3.2-1b", draft=None, **kw):
+    cfg, params = _params(arch)
+    base = dict(n_slots=3, page_size=PAGE, n_pages=96, max_context=64,
+                eos_token=-1)
+    base.update(kw)
+    dcfg, dparams = draft if draft is not None else (None, None)
+    return DecodeEngine(cfg, EngineConfig(faults=faults, draft_config=dcfg,
+                                          **base), params,
+                        draft_params=dparams)
+
+
+def _draft():
+    dcfg = replace(reduced(get_config("llama3.2-1b"), layers=1),
+                   dtype="float32")
+    return dcfg, MDL.init_params(dcfg, jax.random.PRNGKey(7), jnp.float32)
+
+
+def _submit(eng, n, max_new=5, seed=0):
+    cfg, _ = _params()
+    rng = np.random.default_rng(seed)
+    for r in range(n):
+        eng.submit(r, rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(3, 20))), max_new)
+
+
+def _assert_leak_free(eng):
+    assert eng.alloc.pages_in_use == (
+        eng.cache.tree.device_pages() if eng.cache is not None else 0)
+    assert not eng.rsnaps
+    assert not eng.deadline_t
+    assert not eng._abort_req
+
+
+# ---------------------------------------------------------------------------
+# fault injector unit behavior
+# ---------------------------------------------------------------------------
+
+def test_injector_deterministic_and_order_free():
+    """fire() is a pure function of (seed, kind, tick, key) — replaying the
+    same schedule in any call order yields identical decisions/events."""
+    def drive(order):
+        f = FaultInjector(FaultConfig(seed=42, client_abort_p=0.3,
+                                      row_death_p=0.2))
+        hits = {}
+        for _ in range(20):
+            f.on_tick()
+            for kind, key in order:
+                hits[(kind, f.tick, key)] = f.fire(kind, key=key)
+        return hits, f.events
+    a = [("client_abort", 1), ("client_abort", 2), ("row_death", 0)]
+    h1, e1 = drive(a)
+    h2, e2 = drive(list(reversed(a)))
+    assert h1 == h2
+    key = lambda d: (d["kind"], d["tick"], d["key"])  # noqa: E731
+    assert sorted(e1, key=key) == sorted(e2, key=key)
+
+
+def test_injector_max_faults_and_null():
+    f = FaultInjector(FaultConfig(seed=0, slow_tick_p=1.0, max_faults=3))
+    for _ in range(10):
+        f.on_tick()
+        f.fire("slow_tick")
+    assert f.total_fired == 3
+    assert make_faults(None) is NULL_FAULTS
+    assert not NULL_FAULTS.enabled and not NULL_FAULTS.fire("slow_tick")
+
+
+# ---------------------------------------------------------------------------
+# identity: an armed-but-silent injector must change nothing
+# ---------------------------------------------------------------------------
+
+def test_zero_probability_faults_are_identity():
+    ref = _engine()
+    _submit(ref, 6)
+    base = {k: list(v) for k, v in ref.run(500).items()}
+    eng = _engine(FaultConfig(seed=1))        # armed, all probabilities 0
+    _submit(eng, 6)
+    outs = {k: list(v) for k, v in eng.run(500).items()}
+    assert outs == base
+    assert eng.timing.device_syncs == ref.timing.device_syncs
+    assert eng.faults.total_fired == 0
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: abort / deadline / shed across prefill modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["slot", "batched", "chunked"])
+def test_abort_and_deadline_all_prefill_modes(mode):
+    eng = _engine(prefill_mode=mode, prefill_chunk=5)
+    _submit(eng, 6, max_new=20)
+    eng.submit(9, np.arange(1, 10), 20, deadline_s=1e-6)   # expires at once
+    for _ in range(2):
+        eng.tick()
+    assert eng.abort(0)                         # running or queued: live
+    eng.run(500)
+    assert eng.aborted.get(0) == "client"
+    assert eng.aborted.get(9) == "deadline"
+    assert eng.batcher.stats.completed + len(eng.aborted) == 7
+    assert eng.outputs[9] == [] or len(eng.outputs[9]) < 20
+    _assert_leak_free(eng)
+    assert not eng.abort(0)                     # already terminal
+
+
+def test_abort_with_horizon_and_deadline_survivors():
+    """Multi-token decode horizons cross the abort safe point; survivors'
+    deadlines are generous and must NOT fire."""
+    clean = _engine(decode_horizon=4)
+    _submit(clean, 5, max_new=8)
+    ref = {k: list(v) for k, v in clean.run(500).items()}
+    eng = _engine(decode_horizon=4, default_deadline_s=60.0)
+    _submit(eng, 5, max_new=8)
+    eng.tick()
+    eng.abort(2)
+    outs = {k: list(v) for k, v in eng.run(500).items()}
+    assert eng.aborted == {2: "client"}
+    assert all(outs[r] == ref[r] for r in range(5) if r != 2)
+    assert len(outs[2]) < len(ref[2])           # actually cut short
+    _assert_leak_free(eng)                      # incl. deadline_t drained
+
+
+def test_load_shed_bounded_queue():
+    eng = _engine(max_queue=2)
+    cfg, _ = _params()
+    rng = np.random.default_rng(0)
+    oks = [eng.submit(r, rng.integers(0, cfg.vocab_size, size=5), 3)
+           for r in range(8)]
+    assert sum(oks) == 2                        # admission happens at tick
+    assert eng.abort_counts["shed"] == 6
+    eng.run(500)
+    assert eng.batcher.stats.completed == 2
+    assert all(eng.aborted[r] == "shed" for r in range(8)
+               if r not in (0, 1))
+    _assert_leak_free(eng)
+
+
+def test_abort_during_spec_decode_cleans_draft_pool():
+    eng = _engine(draft=_draft(), spec_horizon=3)
+    _submit(eng, 4, max_new=10)
+    eng.tick()
+    eng.abort(1)
+    eng.run(500)
+    assert eng.aborted == {1: "client"}
+    assert 1 not in eng._dlen                   # draft coverage dropped
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# chaos: seeded storms are terminal, leak-free, and replayable
+# ---------------------------------------------------------------------------
+
+def _storm_cfg(seed=7):
+    return FaultConfig(seed=seed, client_abort_p=0.02, row_death_p=0.01,
+                       alloc_exhaust_p=0.05, nan_logits_p=0.01,
+                       slow_tick_p=0.05, slow_tick_s=0.0)
+
+
+def test_chaos_storm_terminal_leak_free_and_replayable():
+    def once():
+        eng = _engine(_storm_cfg(), n_rows=2, n_shards=2)
+        _submit(eng, 6, max_new=8)
+        outs = {k: list(v) for k, v in eng.run(2000).items()}
+        assert eng.batcher.stats.completed + len(eng.aborted) == 6
+        _assert_leak_free(eng)
+        return outs, list(eng.faults.events), dict(eng.aborted)
+    o1, e1, a1 = once()
+    o2, e2, a2 = once()
+    assert (o1, e1, a1) == (o2, e2, a2)         # seed fully replays the run
+
+
+def test_nan_quarantine_and_degradation_ladder():
+    eng = _engine(FaultConfig(seed=3, nan_logits_p=0.25), degrade_after=3)
+    _submit(eng, 6, max_new=6)
+    eng.run(2000)
+    assert eng.abort_counts["nan"] >= 1
+    assert all(r == "nan" for r in eng.aborted.values())
+    assert eng.batcher.stats.completed + len(eng.aborted) == 6
+    if eng.abort_counts["nan"] >= 3:
+        assert eng.degraded_mode & 1            # horizon pinned to 1
+    _assert_leak_free(eng)
+
+
+def test_real_nan_guard_opt_in():
+    """Out-of-range sampled ids only quarantine when the guard is armed
+    (auto with injection, or explicitly): seed behavior is sample-as-is."""
+    assert _engine().nan_guard is False
+    assert _engine(FaultConfig(seed=1)).nan_guard is True
+    assert _engine(nan_guard=True).nan_guard is True
+
+
+def test_row_death_migrates_and_preserves_outputs():
+    clean = _engine(n_rows=2, n_shards=2, n_slots=4)
+    _submit(clean, 8, max_new=8)
+    ref = {k: list(v) for k, v in clean.run(2000).items()}
+    eng = _engine(FaultConfig(seed=3, row_death_p=0.1, max_faults=1),
+                  n_rows=2, n_shards=2, n_slots=4)
+    _submit(eng, 8, max_new=8)
+    outs = {k: list(v) for k, v in eng.run(2000).items()}
+    assert eng.faults.counts.get("row_death", 0) >= 1
+    assert eng.batcher.stats.migrated >= 1      # victims re-queued, not lost
+    assert outs == ref                          # greedy trajectory unchanged
+    _assert_leak_free(eng)
+
+
+def test_spec_degrades_to_plain_decode_under_pressure():
+    draft = _draft()
+    clean = _engine(draft=draft, spec_horizon=3, n_slots=4)
+    _submit(clean, 6, max_new=8)
+    ref = {k: list(v) for k, v in clean.run(2000).items()}
+    eng = _engine(FaultConfig(seed=5, alloc_exhaust_p=0.15),
+                  draft=draft, spec_horizon=3, n_slots=4, degrade_after=2)
+    _submit(eng, 6, max_new=8)
+    outs = {k: list(v) for k, v in eng.run(2000).items()}
+    assert eng.degraded_mode & 2                # spec switched off
+    assert outs == ref                          # greedy outputs unchanged
+    _assert_leak_free(eng)
+
+
+def test_swap_failure_drops_host_tier():
+    eng = _engine(FaultConfig(seed=2, swap_fail_p=0.9), n_pages=32,
+                  prefix_cache=True, host_pages=32, offload_high=0.4,
+                  offload_low=0.2, degrade_after=2)
+    cfg, _ = _params()
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, size=12)
+    for r in range(8):
+        eng.submit(r, np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, size=5)]), 6)
+    eng.run(2000)
+    assert eng.batcher.stats.completed + len(eng.aborted) == 8
+    if eng.degraded_mode & 4:
+        assert eng.cache.host is None           # tier actually dropped
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent snapshots
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_token_identical(tmp_path):
+    clean = _engine()
+    _submit(clean, 6, max_new=8)
+    ref = {k: list(v) for k, v in clean.run(500).items()}
+    eng = _engine(snapshot_dir=str(tmp_path), snapshot_every=3)
+    _submit(eng, 6, max_new=8)
+    for _ in range(7):                          # crash mid-run
+        eng.tick()
+    assert eng.snapshot_saves >= 1
+    eng2 = _engine(snapshot_dir=str(tmp_path))
+    step = eng2.restore_snapshot()
+    assert step is not None
+    outs = {k: list(v) for k, v in eng2.run(500).items()}
+    assert outs == ref
+    assert eng2.snapshot_restores == 1
+    _assert_leak_free(eng2)
+
+
+@pytest.mark.slow
+def test_snapshot_restore_recurrent_carries(tmp_path):
+    """Warm restore of a recurrent hybrid re-seats the saved SSM carries
+    (no re-prefill model call) and still matches the uninterrupted run."""
+    cfg, params = _params("zamba2-1.2b")
+    def eng_for(**kw):
+        return DecodeEngine(cfg, EngineConfig(
+            n_slots=3, page_size=PAGE, n_pages=96, max_context=64,
+            eos_token=-1, **kw), params)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 16))) for _ in range(4)]
+    clean = eng_for()
+    for r, p in enumerate(prompts):
+        clean.submit(r, p, 8)
+    ref = {k: list(v) for k, v in clean.run(500).items()}
+    eng = eng_for(snapshot_dir=str(tmp_path), snapshot_every=4)
+    for r, p in enumerate(prompts):
+        eng.submit(r, p, 8)
+    for _ in range(5):
+        eng.tick()
+    eng2 = eng_for(snapshot_dir=str(tmp_path))
+    assert eng2.restore_snapshot(step=4) == 4
+    outs = {k: list(v) for k, v in eng2.run(500).items()}
+    assert eng2.rstate_restores >= 1            # warm carries re-seated
+    assert outs == ref
+    _assert_leak_free(eng2)
+
+
+def test_metrics_server_clean_shutdown():
+    """Satellite: close() must observably succeed (True) — a leaked daemon
+    thread returns False + a warning instead of being swallowed — and the
+    scrape timeout is configurable per server and per call."""
+    from repro.telemetry.prom import MetricsServer
+    from repro.telemetry.registry import MetricsRegistry
+    reg = MetricsRegistry()
+    reg.counter("up", "help").inc()
+    srv = MetricsServer(reg, port=0, scrape_timeout=2.0)
+    assert srv.scrape_timeout == 2.0
+    assert "up" in srv.scrape(timeout=5.0)
+    assert srv.close() is True                  # thread really exited
+    assert srv.close(join_timeout=0.1) is True  # idempotent once dead
+
+
+def test_snapshot_restore_empty_dir(tmp_path):
+    eng = _engine(snapshot_dir=str(tmp_path))
+    assert eng.restore_snapshot() is None       # nothing to restore: no-op
+    _submit(eng, 2)
+    eng.run(500)
+    assert eng.batcher.stats.completed == 2
