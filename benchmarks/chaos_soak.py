@@ -2,9 +2,11 @@
 
 Drives the REAL engine (tiny llama, CPU) through scripted chaos scenarios
 — mixed fault storms, prefix-cache/host-tier swap failures, client aborts
-plus deadlines under speculative decoding, serving-row deaths, and a
-kill+restore cycle over the crash-consistent snapshots — and enforces the
-robustness invariants the paper's serving story depends on:
+plus deadlines under speculative decoding, serving-row deaths, a
+kill+restore cycle over the crash-consistent snapshots, and a
+disaggregated prefill/decode cluster under engine death + handoff
+corruption + router backpressure — and enforces the robustness invariants
+the paper's serving story depends on:
 
 * **every request reaches a terminal state** (completed or aborted with a
   recorded reason): nothing hangs, nothing is silently dropped;
@@ -118,9 +120,19 @@ def scenario_swap_faults(seed: int):
             [shared, rng.integers(0, cfg.vocab_size, size=6)]), 8)
     eng.run(5000)
     stats = _assert_drained(eng, 12, f"swap_faults[{seed}]")
+    sd = eng.cache.stats_dict()
     stats["swap_in_fails"] = eng.cache.stats.swap_in_fails
+    stats["swap_retries"] = sd.get("swap_retries", 0)
+    fired = eng.faults.counts.get("swap_fail", 0)
+    if fired:
+        # the retry/backoff budget must absorb the first failures of every
+        # streak — a fired fault that neither retried nor counted toward
+        # the ladder would be a silently-lost failure
+        assert stats["swap_retries"] >= 1, "no swap retries recorded"
+        assert stats["swap_retries"] + stats["swap_in_fails"] >= fired
     if eng.degraded_mode & 4:
         assert eng.cache.host is None, "host tier degraded but still wired"
+        assert "swap_retries" in sd, "tier stats lost on degradation"
     return stats
 
 
@@ -228,10 +240,86 @@ def scenario_kill_restore(seed: int):
         shutil.rmtree(d, ignore_errors=True)
 
 
+def scenario_disagg(seed: int):
+    """Disaggregated 1-prefill + 1-decode pool under the cluster fault
+    kinds all at once: engine death mid-decode, corrupted/torn handoffs,
+    and a router backpressure storm (more submissions than the backlog
+    bound). Contracts: every request terminal (served or shed at the
+    router), every surviving engine leak-free, and every COMPLETED request
+    token-identical to a clean colocated single-engine run."""
+    from repro.runtime.faults import FaultConfig
+    from repro.serving import ClusterConfig, EngineCluster, EngineConfig
+    cfg, params = _setup()
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 20)))
+               for _ in range(14)]
+    clean = _engine()
+    for r, p in enumerate(prompts):
+        clean.submit(r, p, 8)
+    ref = {k: list(v) for k, v in clean.run(5000).items()}
+    import shutil
+    import tempfile
+    d = tempfile.mkdtemp(prefix="chaos_disagg_")
+    ecfg = EngineConfig(n_slots=4, page_size=4, n_pages=128, max_context=64,
+                        eos_token=-1, prefill_mode="batched")
+    cl = EngineCluster(cfg, ecfg, ClusterConfig(
+        max_backlog=8,              # the storm: 14 submissions into 8
+        snapshot_dir=d, snapshot_every=3,   # deaths recover warm
+        faults=FaultConfig(seed=seed, engine_death_p=0.03,
+                           handoff_corrupt_p=0.25, handoff_torn_p=0.1,
+                           start_tick=2, max_faults=6)), params)
+    try:
+        for r, p in enumerate(prompts):
+            cl.submit(r, p, 8)
+        outs = {k: list(v) for k, v in cl.run(5000).items()}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    name = f"disagg[{seed}]"
+    # terminal at the router: done + aborted (incl. shed) == submitted
+    term = {s: sum(1 for rec in cl.reqs.values() if rec["state"] == s)
+            for s in ("done", "aborted")}
+    assert term["done"] + term["aborted"] == 14, \
+        f"{name}: {term} != 14 submitted"
+    assert cl.done(), f"{name}: cluster not drained"
+    assert cl.counters["shed"] >= 1, f"{name}: backpressure never fired"
+    assert cl.counters["handoffs"] >= 1, f"{name}: no handoffs exercised"
+    # leak-free on every surviving engine
+    for h in cl.handles:
+        if not h.alive:
+            continue
+        eng = h.eng
+        retained = (eng.cache.tree.device_pages()
+                    if eng.cache is not None else 0)
+        assert eng.alloc.pages_in_use == retained, \
+            f"{name}: engine {h.ix} leaked pages"
+        assert not eng.rsnaps and not eng.deadline_t \
+            and not eng._abort_req, f"{name}: engine {h.ix} dangling state"
+    # token identity for everything that completed
+    for rid, rec in cl.reqs.items():
+        if rec["state"] == "done":
+            assert outs[rid] == ref[rid], \
+                f"{name}: request {rid} diverged from the colocated run"
+    if cl.faults.counts.get("handoff_corrupt", 0) \
+            or cl.faults.counts.get("handoff_torn", 0):
+        assert cl.counters["handoff_retries"] >= 1, \
+            f"{name}: damaged transfer neither retried nor re-driven"
+    return {"scenario": name, "submitted": 14,
+            "completed": term["done"], "aborted": term["aborted"],
+            "abort_counts": dict(cl.aborted),
+            "faults_fired": cl.faults.total_fired,
+            "fault_counts": dict(cl.faults.counts),
+            "degraded_mode": cl.degraded_mode,
+            "migrated": 0, "preempted": 0,
+            "cluster": cl.stats_dict(),
+            "events": list(cl.faults.events)}
+
+
 def run(emit, *, seeds=(0, 1)):
     scenarios = (scenario_mixed_storm, scenario_swap_faults,
                  scenario_abort_deadline, scenario_row_death_identity,
-                 scenario_spec_chaos, scenario_kill_restore)
+                 scenario_spec_chaos, scenario_kill_restore,
+                 scenario_disagg)
     all_stats, all_events = [], []
     for fn in scenarios:
         for seed in seeds:

@@ -95,6 +95,16 @@ def _norm(rows: list[dict]) -> dict[tuple, dict]:
             # report them
             "aborted": r.get("aborted"),
             "faults": r.get("faults_injected"),
+            # disaggregation counters (PR 9): the clean bench's handoff
+            # traffic is a function of the seeded trace alone — exactly one
+            # successful handoff per request, zero retries/redispatches/
+            # deaths — so each gates on exact equality
+            "handoffs": r.get("handoffs"),
+            "handoff_ok": r.get("handoff_ok"),
+            "handoff_retries": r.get("handoff_retries"),
+            "handoff_redispatches": r.get("handoff_redispatches"),
+            "redispatched": r.get("redispatched_requests"),
+            "engine_deaths": r.get("engine_deaths"),
             "abs_thr": thr,
             "abs_ttft": ttft,
             # tail latency from the per-request telemetry records (rows
@@ -139,7 +149,13 @@ def check_serving(base: dict, fresh_runs: list[dict], tol: float,
         # robustness counters are deterministic under the seeded trace:
         # exact match when both sides report them
         for cname, label in (("aborted", "aborted requests"),
-                             ("faults", "faults_injected")):
+                             ("faults", "faults_injected"),
+                             ("handoffs", "handoffs"),
+                             ("handoff_ok", "handoff_ok"),
+                             ("handoff_retries", "handoff_retries"),
+                             ("handoff_redispatches", "handoff_redispatches"),
+                             ("redispatched", "redispatched_requests"),
+                             ("engine_deaths", "engine_deaths")):
             if br.get(cname) is None:
                 continue
             cval = _median([fr.get(cname) for fr in frs])

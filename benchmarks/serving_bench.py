@@ -11,6 +11,12 @@ orchestration (one jit per admission bucket, the vectorized config-buffer
 assembly, and the fused multi-step scan amortizing dispatch/sync/sample
 round-trips over K tokens), not changed math.
 
+The ``disagg`` section runs the same trace through a disaggregated
+1-prefill + 1-decode ``EngineCluster``: outputs must be token-identical to
+the colocated base and the router's handoff/redispatch counters (exactly
+one successful handoff per request, zero failures) are hard-gated by
+``check_regression.py``.
+
 The ``--draft`` section (on by default) adds speculative decoding over the
 decode-dominated trace: an oracle draft pair whose greedy proposals are
 bit-identical to the target's (see ``_spec_setup``) reports mean accept
@@ -185,6 +191,55 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
             "outputs": {k: list(v) for k, v in outs.items()}}
 
 
+def bench_disagg(*, arch: str = "llama3.2-1b", requests: int = 8,
+                 new_tokens: int = 8, max_prompt: int = 64,
+                 warmup: int = 2) -> dict:
+    """Disaggregated 1-prefill + 1-decode cluster over the SAME seeded
+    trace as the prefill section's colocated base. Every request crosses
+    the crash-safe handoff boundary exactly once; the row reports the
+    router's handoff/redispatch counters, which are deterministic on the
+    clean bench (no faults) — ``handoff_ok == handoffs == submissions``
+    and every failure counter is 0, hard-gated by check_regression.py."""
+    from repro.serving import ClusterConfig, EngineCluster, EngineConfig
+    cfg, params = _setup(arch)
+    ecfg = EngineConfig(n_slots=4, page_size=8, n_pages=160, max_context=128,
+                        eos_token=-1, prefill_mode="batched")
+    cl = EngineCluster(cfg, ecfg,
+                       ClusterConfig(n_prefill=1, n_decode=1), params)
+    rng = np.random.default_rng(7)
+    for i in range(warmup):
+        cl.submit(1000 + i,
+                  rng.integers(0, cfg.vocab_size,
+                               size=int(rng.integers(8, max_prompt))),
+                  new_tokens)
+    cl.run(10_000)
+    warm_handoffs = cl.counters["handoffs"]
+    warm_ok = cl.counters["handoff_ok"]
+    rng = np.random.default_rng(0)
+    for i in range(requests):
+        plen = int(rng.integers(8, max_prompt))
+        cl.submit(i, rng.integers(0, cfg.vocab_size, size=plen), new_tokens)
+    t0 = time.perf_counter()
+    cl.run(10_000)
+    dt = time.perf_counter() - t0
+    outs = {k: list(v) for k, v in cl.outputs.items() if k < 1000}
+    toks = sum(len(v) for v in outs.values())
+    c = cl.counters
+    return {"mode": "disagg_1p1d", "arch": arch, "horizon": 1,
+            "tok_s": toks / max(dt, 1e-9),
+            "tokens": toks, "wall_s": dt,
+            "aborted": len(cl.aborted),
+            "faults_injected": cl.faults.total_fired,
+            "handoffs": c["handoffs"] - warm_handoffs,
+            "handoff_ok": c["handoff_ok"] - warm_ok,
+            "handoff_retries": c["handoff_retries"],
+            "handoff_redispatches": c["handoff_redispatches"],
+            "redispatched_requests": c["redispatched_requests"],
+            "engine_deaths": c["engine_deaths"],
+            "shed": c["shed"],
+            "outputs": outs}
+
+
 def run(emit, *, smoke: bool = False, draft: bool = True):
     kw = dict(requests=4, new_tokens=6, warmup=1) if smoke else {}
     hkw = dict(kw, new_tokens=6 if smoke else 64)   # decode-dominated trace
@@ -243,6 +298,21 @@ def run(emit, *, smoke: bool = False, draft: bool = True):
              f"prefill_s={r['prefill_s']:.2f} "
              f"speedup={r['tok_s'] / max(rbase['tok_s'], 1e-9):.2f}x "
              f"ttft_speedup={rbase['ttft_ms'] / max(r['ttft_ms'], 1e-9):.2f}x")
+    # disaggregated serving: 1-prefill + 1-decode cluster over the prefill
+    # section's exact trace — greedy outputs must match the colocated base
+    # token-for-token, every request must cross the handoff boundary exactly
+    # once, and no retry/redispatch/death counter may move on the clean
+    # bench (check_regression.py hard-gates each counter exactly)
+    dr = keep(bench_disagg(**kw), "disagg")
+    assert dr["outputs"] == base["outputs"], \
+        "disaggregated serving changed greedy outputs"
+    assert dr["handoffs"] == dr["handoff_ok"], \
+        (dr["handoffs"], dr["handoff_ok"])
+    emit("serving_disagg_1p1d", dr["tok_s"],
+         f"tok/s={dr['tok_s']:.1f} handoffs={dr['handoffs']} "
+         f"ok={dr['handoff_ok']} retries={dr['handoff_retries']} "
+         f"redispatches={dr['handoff_redispatches']} "
+         f"deaths={dr['engine_deaths']}")
     if draft:
         # speculative decode over the decode-dominated trace: the oracle
         # draft pair (zeroed-layer-2 target + bit-identical 1-layer slice,

@@ -169,6 +169,8 @@ class PageAllocator:
         except MemoryError:
             self.free(req)              # release borrowed refs + fresh pages
             raise
+        if shared:
+            self._notify_reclaimer()    # borrowed pages gained an owner
         return list(self._tables[req])
 
     def ensure(self, req: int, n_tokens: int, *,
@@ -292,7 +294,19 @@ class PageAllocator:
         pages = self._tables.pop(req)
         self._rr.pop(req, None)
         self._row.pop(req, None)
-        return sum(1 for p in pages if self.decref(p))
+        freed = sum(1 for p in pages if self.decref(p))
+        # pages the request shared with the cache just lost an owner — the
+        # reclaimable-capacity memo must see the new refcounts
+        self._notify_reclaimer()
+        return freed
+
+    def _notify_reclaimer(self) -> None:
+        """Invalidate the reclaimer's capacity memo after a refcount
+        change. Duck-typed: reclaimers without a ``_mutated`` hook (test
+        stubs, custom policies) just recompute on the next query."""
+        m = getattr(self.reclaimer, "_mutated", None)
+        if m is not None:
+            m()
 
     # ------------------------------------------------------------------
     def block_table(self, req: int, width: int) -> np.ndarray:

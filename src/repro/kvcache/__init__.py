@@ -6,9 +6,12 @@ Layered under the serving engine (see docs/kvcache.md):
   sharing, page-boundary splits, copy-on-write on mid-page divergence);
 * ``offload`` — host-DRAM capacity tier with ping-pong-style async swaps;
 * ``policy``  — pluggable placement/eviction (LRU, watermarks, swap cost);
-* ``cache``   — the ``PrefixCache`` facade the engine and scheduler use.
+* ``cache``   — the ``PrefixCache`` facade the engine and scheduler use;
+* ``handoff`` — versioned, checksummed cross-engine KV transfer blobs for
+  disaggregated serving (``serving/cluster.py``).
 """
 from repro.kvcache.cache import CacheHit, CacheStats, PrefixCache
+from repro.kvcache.handoff import Handoff, HandoffError
 from repro.kvcache.offload import DeviceOpQueue, HostTier, TierStats
 from repro.kvcache.policy import (EvictionPolicy, LRUPolicy, WatermarkConfig,
                                   make_cache_policy)
@@ -19,4 +22,5 @@ __all__ = [
     "HostTier", "TierStats", "DeviceOpQueue",
     "EvictionPolicy", "LRUPolicy", "WatermarkConfig", "make_cache_policy",
     "RadixTree", "RadixNode", "MatchResult",
+    "Handoff", "HandoffError",
 ]

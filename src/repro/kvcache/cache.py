@@ -71,12 +71,24 @@ class CacheStats:
 class PrefixCache:
     def __init__(self, alloc, *, policy: EvictionPolicy | str = "lru",
                  host_pages: int = 0,
-                 pool_ref: Callable[[], dict] | None = None):
+                 pool_ref: Callable[[], dict] | None = None,
+                 swap_retry_limit: int = 3, swap_backoff_cap: int = 8):
         self.alloc = alloc
         alloc.reclaimer = self              # cold cached pages = capacity
         self.tree = RadixTree(alloc.page_size)
         self.policy = make_cache_policy(policy)
         self.host = HostTier(host_pages) if host_pages > 0 else None
+        # transient-failure absorption BEFORE the degrade_after ladder: up
+        # to swap_retry_limit consecutive failed swap-ins are retried after
+        # a capped-exponential backoff (1, 2, 4, ... maintain() ticks) and
+        # counted as TierStats.swap_retries; only failures past the budget
+        # advance stats.swap_in_fails toward dropping the tier
+        self.swap_retry_limit = swap_retry_limit
+        self.swap_backoff_cap = swap_backoff_cap
+        self._swap_streak = 0               # consecutive failed swap-ins
+        self._swap_retry_at = 0             # maintain-tick backoff gate
+        self._mtick = 0                     # maintain() call counter
+        self._dropped_stats: "TierStats | None" = None
         self.ops = DeviceOpQueue()
         # pool_ref: () -> {"k","v"} pool arrays — swap-out gathers read the
         # engine's *current* functional pool at dispatch time
@@ -238,19 +250,38 @@ class PrefixCache:
         correctness."""
         if self.host is None:               # tier dropped (degradation)
             return False
+        if self._mtick < self._swap_retry_at:
+            return False                    # backing off after a failure
         if self.faults.enabled and self.faults.fire(
                 "swap_fail", key=self.stats.lookups):
-            self.stats.swap_in_fails += 1
+            self._swap_failed()
             return False
         try:
             pages = self.alloc.alloc_pages(node.n_pages)
         except MemoryError:
-            self.stats.swap_in_fails += 1
+            self._swap_failed()
             return False
+        self._swap_streak = 0
         data = self.host.take(node)
         node.pages = pages
         self.ops.queue_scatter(pages, data["k"], data["v"])
         return True
+
+    def _swap_failed(self) -> None:
+        """Account one failed swap-in. The first ``swap_retry_limit``
+        consecutive failures are treated as transient: counted in
+        ``TierStats.swap_retries`` and gated behind a capped exponential
+        backoff window so the tier is not hammered while unhealthy. Only a
+        failure past the retry budget advances ``stats.swap_in_fails`` —
+        the counter the engine's degrade_after ladder watches — so one
+        pressure blip no longer walks the cache toward dropping the tier."""
+        self._swap_streak += 1
+        if self._swap_streak <= self.swap_retry_limit:
+            self.host.stats.swap_retries += 1
+            self._swap_retry_at = self._mtick + min(
+                self.swap_backoff_cap, 1 << (self._swap_streak - 1))
+            return
+        self.stats.swap_in_fails += 1
 
     def drop_host_tier(self) -> int:
         """Degradation: abandon the host offload tier after repeated swap
@@ -265,7 +296,8 @@ class PrefixCache:
         if self.host is None:
             return 0
         self._mutated()
-        self.host.drain()
+        self._dropped_stats = self.host.stats   # keep the tier's counters
+        self.host.drain()                       # visible post-degradation
         n = 0
         while True:                         # removal is leaf-only; peel
             cands = [c for c in self.tree.nodes()
@@ -316,8 +348,14 @@ class PrefixCache:
         between mutations (see __init__)."""
         if self._reclaimable_memo is None:
             inflight = self.ops.inflight_pages()
+            # count pages, not nodes: a page a running request still
+            # references (tree ref + request ref => ref_of > 1) would
+            # survive eviction, so advertising it as capacity lets
+            # admission overcommit and walk straight into mid-decode
+            # preemptions the count was supposed to prevent
             self._reclaimable_memo = sum(
-                n.n_pages for n in self.tree.nodes()
+                sum(1 for p in n.pages if self.alloc.ref_of(p) == 1)
+                for n in self.tree.nodes()
                 if not n.on_host and n.ref == 0
                 and not (inflight and set(n.pages) & inflight))
         return self._reclaimable_memo
@@ -350,7 +388,8 @@ class PrefixCache:
         with no tier — or a full one — pages stay put for the allocator's
         on-demand reclaim, and running requests' own occupancy never
         triggers a pointless tree flush."""
-        if self.host is None:
+        self._mtick += 1                    # backoff windows are measured
+        if self.host is None:               # in maintain() ticks
             return
         self.host.drain()
         need = self.policy.pressure_pages(self.alloc)
@@ -365,4 +404,6 @@ class PrefixCache:
         out["tree_host_pages"] = self.tree.host_pages()
         if self.host is not None:
             out.update(self.host.stats.as_dict())
+        elif self._dropped_stats is not None:
+            out.update(self._dropped_stats.as_dict())
         return out

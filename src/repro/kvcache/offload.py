@@ -64,6 +64,8 @@ class TierStats:
     swapped_in_pages: int = 0
     dropped_pages: int = 0          # evicted without a host copy
     peak_host_pages: int = 0
+    swap_retries: int = 0           # failed swap-ins absorbed by the
+                                    # retry/backoff budget (not the ladder)
 
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}

@@ -22,6 +22,15 @@ covering fraction ``f`` of its tokens (multi-tenant shared-prefix traffic);
 adds the host offload tier below the device pool (see repro.kvcache /
 docs/kvcache.md). Cache hit/swap counters are reported alongside.
 
+``--disagg`` serves through a disaggregated prefill/decode fleet
+(``--engines P+D``, see docs/serving.md): prefill-role engines hand each
+finished-prefill request's KV + recurrent carry to a decode-role engine
+over a checksummed handoff blob, with router-owned retry/backoff,
+timeouts, engine-death recovery (``--snapshot-dir`` enables warm
+restores) and backpressure (``--max-queue`` bounds the decode backlog).
+``--fault-engine-death`` / ``--fault-handoff-corrupt`` /
+``--fault-handoff-torn`` drive the cluster's seeded fault injector.
+
 Telemetry (repro.telemetry, docs/observability.md): ``--metrics-port N``
 serves Prometheus text on ``http://127.0.0.1:N/metrics`` (0 = pick an
 ephemeral port, printed at startup), ``--trace-out trace.json`` writes a
@@ -44,16 +53,23 @@ from repro.data.pipeline import request_trace
 from repro.serving import DecodeEngine, EngineConfig
 
 
+def make_serve_tel_cfg(args):
+    """TelemetryConfig from the CLI flags, or None when every telemetry
+    flag is off."""
+    from repro.telemetry import TelemetryConfig
+    want_metrics = args.metrics_port >= 0 or args.stats_every > 0
+    if not (want_metrics or args.trace_out or args.request_log):
+        return None
+    return TelemetryConfig(
+        metrics=True, trace_path=args.trace_out or None,
+        request_log=args.request_log or None)
+
+
 def make_serve_telemetry(args):
     """Build the Telemetry facade from the CLI flags — the shared no-op
     when every telemetry flag is off (EngineConfig.telemetry=None path)."""
-    from repro.telemetry import TelemetryConfig, make_telemetry
-    want_metrics = args.metrics_port >= 0 or args.stats_every > 0
-    if not (want_metrics or args.trace_out or args.request_log):
-        return make_telemetry(None)
-    return make_telemetry(TelemetryConfig(
-        metrics=True, trace_path=args.trace_out or None,
-        request_log=args.request_log or None))
+    from repro.telemetry import make_telemetry
+    return make_telemetry(make_serve_tel_cfg(args))
 
 
 def build_engine(args, telemetry=None) -> DecodeEngine:
@@ -104,6 +120,77 @@ def make_serve_faults(args):
         return None
     from repro.runtime.faults import FaultConfig
     return FaultConfig(seed=args.fault_seed, **ps)
+
+
+def make_cluster_faults(args):
+    """Cluster-level FaultConfig (engine death + handoff damage) from the
+    --fault-engine-death / --fault-handoff-* flags; None when all are 0."""
+    ps = dict(engine_death_p=args.fault_engine_death,
+              handoff_corrupt_p=args.fault_handoff_corrupt,
+              handoff_torn_p=args.fault_handoff_torn)
+    if not any(ps.values()):
+        return None
+    from repro.runtime.faults import FaultConfig
+    return FaultConfig(seed=args.fault_seed, **ps)
+
+
+def serve_cluster(args) -> int:
+    """--disagg path: route the trace through an EngineCluster fleet
+    (``--engines P+D`` prefill/decode members) instead of one engine.
+    Greedy outputs are token-identical to the single-engine run; the
+    summary reports the router's handoff/recovery counters."""
+    from repro.serving import ClusterConfig, EngineCluster
+    try:
+        n_p, n_d = (int(x) for x in args.engines.split("+"))
+    except ValueError:
+        raise SystemExit(f"--engines wants P+D (e.g. 1+1), "
+                         f"got {args.engines!r}")
+    tel_cfg = make_serve_tel_cfg(args)
+    cfg = replace(reduced(get_config(args.arch)), dtype="float32")
+    ecfg = EngineConfig(n_slots=args.slots, page_size=args.page,
+                        n_pages=args.pages, max_context=args.max_context,
+                        static_alloc=args.static, eos_token=-1,
+                        prefill_mode=args.prefill_mode,
+                        prefill_chunk=args.chunk,
+                        sched_policy=args.sched_policy,
+                        decode_horizon=args.decode_horizon,
+                        state_resume=not args.no_state_resume,
+                        telemetry=tel_cfg,
+                        faults=make_serve_faults(args),
+                        degrade_after=args.degrade_after)
+    ccfg = ClusterConfig(n_prefill=n_p, n_decode=n_d,
+                         max_backlog=args.max_queue,
+                         snapshot_dir=args.snapshot_dir or None,
+                         snapshot_every=args.snapshot_every,
+                         faults=make_cluster_faults(args),
+                         telemetry=tel_cfg)
+    cl = EngineCluster(cfg, ecfg, ccfg)
+    if cl.tel.enabled and args.metrics_port >= 0:
+        from repro.telemetry.prom import MetricsServer
+        srv = MetricsServer(cl.tel.registry, args.metrics_port)
+        print(f"[serve] metrics: {srv.url}", flush=True)
+    submit_trace(cl, args)
+    t0 = time.time()
+    cl.run(100_000)
+    dt = time.time() - t0
+    toks = sum(len(v) for v in cl.outputs.values())
+    done = sum(1 for r in cl.reqs.values() if r["state"] == "done")
+    c = cl.counters
+    print(f"[serve] mode=disagg engines={n_p}p+{n_d}d "
+          f"prefill={args.prefill_mode} "
+          f"completed={done}/{args.requests} aborted={len(cl.aborted)} "
+          f"tokens={toks} tok/s={toks / max(dt, 1e-9):.1f}", flush=True)
+    print(f"[serve] cluster: handoffs={c['handoffs']} ok={c['handoff_ok']} "
+          f"retries={c['handoff_retries']} timeouts={c['handoff_timeouts']} "
+          f"redispatches={c['handoff_redispatches']} "
+          f"redrives={c['handoff_redrives']} deaths={c['engine_deaths']} "
+          f"restores={c['engine_restores']} "
+          f"redispatched_requests={c['redispatched_requests']} "
+          f"shed={c['shed']} degraded_mode={cl.degraded_mode}", flush=True)
+    if cl.tel.enabled:
+        print(f"[serve] {cl.tel.stats_line()}", flush=True)
+        cl.tel.close()
+    return done
 
 
 def submit_trace(eng: DecodeEngine, args) -> None:
@@ -195,6 +282,14 @@ def main(argv=None):
     ap.add_argument("--stats-every", type=float, default=0.0,
                     help="print a telemetry stats line every S seconds "
                          "while serving (0 = off)")
+    # ---- disaggregation (docs/serving.md) ----
+    ap.add_argument("--disagg", action="store_true",
+                    help="serve through a disaggregated prefill/decode "
+                         "engine fleet (EngineCluster) with crash-safe KV "
+                         "handoff instead of one colocated engine")
+    ap.add_argument("--engines", default="1+1",
+                    help="fleet shape for --disagg: P+D prefill/decode "
+                         "member counts (e.g. 2+2)")
     # ---- robustness (docs/robustness.md) ----
     ap.add_argument("--max-queue", type=int, default=0,
                     help="bounded admission queue: load-shed beyond this "
@@ -225,11 +320,19 @@ def main(argv=None):
                        ("--fault-row-death", "serving-row death"),
                        ("--fault-nan", "NaN-logits quarantine"),
                        ("--fault-slow-tick", "straggler tick"),
-                       ("--fault-abort", "client abort")):
+                       ("--fault-abort", "client abort"),
+                       ("--fault-engine-death", "pool engine death "
+                        "(--disagg)"),
+                       ("--fault-handoff-corrupt", "handoff byte flip "
+                        "(--disagg)"),
+                       ("--fault-handoff-torn", "handoff truncation "
+                        "(--disagg)")):
         ap.add_argument(flag, type=float, default=0.0,
                         help=f"per-decision injection probability: {kind}")
     args = ap.parse_args(argv)
 
+    if args.disagg:
+        return serve_cluster(args)
     tel = make_serve_telemetry(args)
     eng = build_engine(args, telemetry=tel)
     if tel.enabled and args.metrics_port >= 0:

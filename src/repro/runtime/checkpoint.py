@@ -13,17 +13,34 @@ Fault-tolerance contract (runtime/elastic.py): checkpoint every N steps;
 on any node failure the job restarts from the last complete step with a
 (possibly smaller) mesh and an identical data stream (data/pipeline.py is
 seeded per step).
+
+The manifest additionally records a crc32 per flattened array, so a step
+whose payload was corrupted *after* the commit point (bit rot, a torn
+copy) is detected by ``verify_step`` and skipped by callers that walk
+``valid_steps`` newest-to-oldest — restore degrades to an older step (or
+to a cold start) instead of applying garbage. ``kvcache/handoff.py``
+reuses ``array_crc`` for its transfer manifests.
 """
 from __future__ import annotations
 
 import json
 import shutil
 import time
+import zlib
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def array_crc(arr: np.ndarray) -> int:
+    """crc32 over an array's bytes + dtype + shape (a reshaped or recast
+    payload with identical bytes still fails verification)."""
+    arr = np.ascontiguousarray(arr)
+    h = zlib.crc32(arr.tobytes())
+    h = zlib.crc32(str(arr.dtype).encode(), h)
+    return zlib.crc32(repr(arr.shape).encode(), h)
 
 
 def _flatten(tree):
@@ -48,7 +65,8 @@ def save(ckpt_dir, step: int, tree, *, host_id: int = 0,
     np.savez(step_dir / f"shard_{host_id:05d}.npz", **items)
     if host_id == 0:
         manifest = {"step": step, "time": time.time(),
-                    "n_arrays": len(items), "extra": extra or {}}
+                    "n_arrays": len(items), "extra": extra or {},
+                    "crc": {k: array_crc(v) for k, v in items.items()}}
         # manifest written last = commit point
         (step_dir / "manifest.json").write_text(json.dumps(manifest))
         _gc(ckpt_dir, keep)
@@ -67,6 +85,46 @@ def latest_step(ckpt_dir) -> int | None:
     steps = sorted(d for d in ckpt_dir.glob("step_*")
                    if (d / "manifest.json").exists())
     return int(steps[-1].name.split("_")[1]) if steps else None
+
+
+def valid_steps(ckpt_dir) -> list[int]:
+    """Steps with a *parseable* manifest, oldest first. A truncated or
+    garbled manifest.json (crash or corruption mid-write) disqualifies the
+    step — it never reached its commit point."""
+    out = []
+    for d in sorted(Path(ckpt_dir).glob("step_*")):
+        mf = d / "manifest.json"
+        if not mf.exists():
+            continue
+        try:
+            json.loads(mf.read_text())
+        except (OSError, ValueError):
+            continue
+        out.append(int(d.name.split("_")[1]))
+    return out
+
+
+def verify_step(ckpt_dir, step: int, *, host_id: int = 0) -> bool:
+    """Full payload validation for one step: manifest parses, the shard
+    loads, and every manifest-listed array is present with a matching
+    crc32. Pre-checksum manifests (no ``crc`` key) only get the
+    load/presence checks. Never raises — any failure is False."""
+    step_dir = Path(ckpt_dir) / f"step_{step:08d}"
+    try:
+        manifest = json.loads((step_dir / "manifest.json").read_text())
+        with np.load(step_dir / f"shard_{host_id:05d}.npz") as data:
+            crcs = manifest.get("crc")
+            keys = crcs if crcs is not None else data.files
+            if len(data.files) != int(manifest.get("n_arrays",
+                                                   len(data.files))):
+                return False
+            for key in keys:
+                arr = data[key]                 # KeyError/zlib error = bad
+                if crcs is not None and array_crc(arr) != int(crcs[key]):
+                    return False
+    except Exception:
+        return False
+    return True
 
 
 def restore(ckpt_dir, step: int, like, *, host_id: int = 0):

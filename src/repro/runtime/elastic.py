@@ -71,6 +71,25 @@ def plan_request_migration(row_of_request: dict[int, int],
     return sorted(r for r, row in row_of_request.items() if row in dead_rows)
 
 
+def plan_role_collapse(roles: dict[int, str],
+                       healthy: set[int]) -> dict[int, str] | None:
+    """Sticky degradation planning for the disaggregated engine cluster
+    (``serving/cluster.py``): when either the prefill or the decode role
+    has no healthy member left, every surviving engine collapses to the
+    colocated ``both`` role — the cluster keeps serving as a (possibly
+    single-engine) colocated pool instead of wedging on a missing stage.
+
+    Returns the new role map over the healthy engines, or None when both
+    roles are still covered (no change needed). An empty map means nothing
+    survived — the cluster must go terminal."""
+    def covered(role: str) -> bool:
+        return any(ix in healthy and r in (role, "both")
+                   for ix, r in roles.items())
+    if covered("prefill") and covered("decode"):
+        return None
+    return {ix: "both" for ix in roles if ix in healthy}
+
+
 @dataclass
 class StragglerPolicy:
     n_rows: int

@@ -26,6 +26,17 @@ Fault kinds and where the engine wires them (see docs/robustness.md):
 * ``client_abort`` — a live request receives a client abort (the seeded
   stand-in for a user hanging up mid-stream).
 
+Cluster-level kinds (fired by ``serving/cluster.py``'s router, not by an
+engine — the cluster runs its own injector clock):
+
+* ``engine_death``    — a pool engine dies at the tick boundary; its
+  in-flight requests are re-routed (cold quiescent-frame re-prefill) or
+  restored warm from the engine's last serving snapshot.
+* ``handoff_torn``    — a cross-engine KV handoff is truncated in flight;
+  the byte-stream length check rejects it and the router retries.
+* ``handoff_corrupt`` — one byte of a handoff transfer flips; the manifest
+  checksum rejects it before anything is applied.
+
 Disabled fault injection is the shared ``NULL_FAULTS`` singleton:
 ``enabled`` is False and every ``fire()`` short-circuits — the engine's
 outputs and device-sync count are bit-identical to a build without the
@@ -36,7 +47,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 KINDS = ("alloc_exhaust", "swap_fail", "swap_stall", "row_death",
-         "nan_logits", "slow_tick", "client_abort")
+         "nan_logits", "slow_tick", "client_abort",
+         "engine_death", "handoff_torn", "handoff_corrupt")
 
 _MASK = (1 << 64) - 1
 
@@ -67,6 +79,9 @@ class FaultConfig:
     slow_tick_p: float = 0.0          # per tick
     slow_tick_s: float = 0.002        # straggler sleep when it fires
     client_abort_p: float = 0.0       # per (tick, live request)
+    engine_death_p: float = 0.0       # per (tick, pool engine)
+    handoff_torn_p: float = 0.0       # per (tick, handoff transmission)
+    handoff_corrupt_p: float = 0.0    # per (tick, handoff transmission)
     start_tick: int = 0               # no injections before this tick
     max_faults: int = 0               # total fire budget (0 = unbounded)
 

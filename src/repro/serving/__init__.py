@@ -2,12 +2,16 @@
 
 ``engine`` orchestrates tick = schedule -> prefill -> decode -> sample;
 ``prefill`` holds the slot / batched / chunked strategies; ``policies`` the
-pluggable admission policies; ``sampling`` the jitted samplers. See
-docs/serving.md for the mapping onto the paper's DCS/DPA mechanisms.
+pluggable admission policies; ``sampling`` the jitted samplers; ``cluster``
+the disaggregated prefill/decode engine pool behind a fault-tolerant
+router. See docs/serving.md for the mapping onto the paper's DCS/DPA
+mechanisms.
 """
+from repro.serving.cluster import ClusterConfig, EngineCluster, EngineHandle
 from repro.serving.engine import DecodeEngine, EngineConfig, EngineTiming
 from repro.serving.policies import (FCFSPolicy, MemoryAwarePolicy,
-                                    SchedulingPolicy, SJFPolicy, make_policy)
+                                    SchedulingPolicy, SJFPolicy, make_policy,
+                                    route_least_loaded)
 from repro.serving.prefill import (BatchedPrefiller, ChunkedPrefiller,
                                    SlotPrefiller, make_prefiller)
 from repro.serving.sampling import (Sampler, greedy_sample,
@@ -16,8 +20,9 @@ from repro.serving.sampling import (Sampler, greedy_sample,
 
 __all__ = [
     "DecodeEngine", "EngineConfig", "EngineTiming",
+    "EngineCluster", "ClusterConfig", "EngineHandle",
     "SchedulingPolicy", "FCFSPolicy", "SJFPolicy", "MemoryAwarePolicy",
-    "make_policy",
+    "make_policy", "route_least_loaded",
     "SlotPrefiller", "BatchedPrefiller", "ChunkedPrefiller", "make_prefiller",
     "Sampler", "greedy_sample", "make_callback_sampler", "make_sampler",
     "make_scan_sampler", "make_verifier",

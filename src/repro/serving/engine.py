@@ -162,6 +162,11 @@ class EngineConfig:
     # Sticky bits land in DecodeEngine.degraded_mode. 0 disables the
     # ladder.
     degrade_after: int = 3
+    # transient swap-in failures absorbed by retry + capped exponential
+    # backoff (TierStats.swap_retries) before each one starts counting
+    # toward the degrade_after ladder above (kvcache/cache.py)
+    swap_retry_limit: int = 3
+    swap_backoff_cap: int = 8
     # ---- crash-consistent serving snapshots ----
     # snapshot_every > 0: every N ticks run() writes a serving checkpoint
     # (scheduler + slot + written-KV + recurrent-carry state) under
@@ -178,6 +183,13 @@ class EngineConfig:
     # with out-of-vocab prompts) keep the pre-hardening sample-as-is
     # behavior unless they opt in.
     nan_guard: bool | None = None
+    # ---- disaggregated serving (serving/cluster.py) ----
+    # the engine's role in a cluster: "prefill" engines run requests to
+    # their first token and hand them off, "decode" engines adopt and
+    # finish them, "both" is the colocated single-engine behavior. The
+    # engine itself only records the role — the cluster's router enforces
+    # it (a standalone engine ignores this field entirely).
+    role: str = "both"
 
 
 @dataclass
@@ -348,7 +360,9 @@ class DecodeEngine:
                                              ecfg.offload_high,
                                              ecfg.offload_low)),
                 host_pages=ecfg.host_pages,
-                pool_ref=lambda: self.state["pool"])
+                pool_ref=lambda: self.state["pool"],
+                swap_retry_limit=ecfg.swap_retry_limit,
+                swap_backoff_cap=ecfg.swap_backoff_cap)
             self.batcher.cache = self.cache
             self.batcher.cache_tokens = self._cache_tokens
             self.batcher.dedup = ecfg.prefill_dedup
@@ -418,7 +432,8 @@ class DecodeEngine:
         # (client / deadline / nan / shed / chaos)
         self.aborted: dict[int, str] = {}
         self.abort_counts: dict[str, int] = {
-            "client": 0, "deadline": 0, "nan": 0, "shed": 0, "chaos": 0}
+            "client": 0, "deadline": 0, "nan": 0, "shed": 0, "chaos": 0,
+            "handoff": 0}
         # aborts requested mid-tick; torn down at the next safe point (a
         # teardown while a horizon is in flight would free pages its KV
         # writes still target — re-admitted, they'd be corrupted)
@@ -431,6 +446,7 @@ class DecodeEngine:
         # serving snapshot bookkeeping (save_snapshot / restore_snapshot)
         self.snapshot_saves = 0
         self.snapshot_restores = 0
+        self.snapshot_rejects = 0       # torn/corrupt steps skipped
         self._tick_no = 0
         # ---- telemetry (must come last: bindings read everything above).
         # Disabled -> the shared NULL facade; the scheduler's events hook
@@ -516,7 +532,12 @@ class DecodeEngine:
         prompt = self.prompts[req.req_id]
         out = self.outputs[req.req_id]
         if req.prompt_len == len(prompt):
-            return prompt, True
+            # emit only when no first token exists yet: a re-admission at
+            # exactly prompt depth with output already streamed (a handoff
+            # or engine-death re-drive at generated == 0) must not sample a
+            # duplicate — the existing first token re-enters as the
+            # pending decode input instead
+            return prompt, not out
         return np.concatenate(
             [prompt, np.asarray(out[:-1], np.int32)])[:req.prompt_len], False
 
@@ -1344,6 +1365,70 @@ class DecodeEngine:
             self._pending_fin = self._collect_horizon()
         return self.outputs
 
+    # ---- cross-engine request movement (serving/cluster.py) -----------
+    def quiesce(self) -> None:
+        """Bring the engine to the post-collect quiescent frame: fold any
+        in-flight horizon into host bookkeeping (its finish mask joins the
+        pending one for the next scheduler step) and drain pending device
+        snapshots. Snapshots, handoffs and teardowns all require this
+        frame; costs one extra device sync when a horizon was in flight."""
+        if self._inflight is not None:
+            fin = self._collect_horizon()
+            if fin is not None:
+                self._pending_fin = fin if self._pending_fin is None \
+                    else (self._pending_fin | fin)
+        self._drain_snapshots()
+
+    def extract_request(self, req_id: int):
+        """Pull a live request out of this engine for a cross-engine
+        handoff: quiesce, capture its snapshot-entry frame (written KV
+        pages + recurrent carry when warm), then tear it down locally
+        (reason ``handoff`` — its private pages free; prefixes it already
+        published to the radix cache survive under the tree's own refs).
+        Returns ``(entry, arrays)``, or None when the request is not live
+        or finished during the quiesce (its output is already complete —
+        nothing to move)."""
+        self.quiesce()
+        s, req = self._find_request(req_id)
+        if req is None:
+            return None
+        if s is not None and self._pending_fin is not None \
+                and self._pending_fin[s]:
+            return None
+        ent, arrs = self._snapshot_entry(req, s)
+        self._teardown(req_id, "handoff")
+        return ent, arrs
+
+    def adopt_request(self, req_id: int, ent: dict, prompt, out, *,
+                      kv=None, rows=None):
+        """Register a request arriving from OUTSIDE the submit() path — a
+        snapshot restore or a cross-engine handoff. ``ent`` is the scalar
+        snapshot-entry frame (``_snapshot_entry``); ``out`` the tokens
+        already streamed to the client. Warm entries seed the preemption-
+        snapshot machinery so the prefiller restores the KV/carry instead
+        of recomputing; slot-mode prefill (the recompute reference) and
+        cold entries re-prefill deterministically — token-identical either
+        way. Returns the constructed Request (already queued)."""
+        self.prompts[req_id] = np.asarray(prompt, np.int32)
+        self.outputs[req_id] = [int(t) for t in out]
+        self.submit_t[req_id] = time.perf_counter()
+        self.tel.on_submit(req_id, len(self.prompts[req_id]),
+                           int(ent["max_new"]), self.submit_t[req_id])
+        req = Request(req_id, int(ent["prompt_len"]), int(ent["max_new"]))
+        if self.prefiller.name == "chunked":
+            req.chunked_prefill = True
+            req.prefill_done = False
+        warm_ok = self.ecfg.state_resume and self.prefiller.name != "slot"
+        if ent.get("state") == "warm" and warm_ok:
+            snap: dict[str, Any] = {"len": int(ent["depth"])}
+            if kv is not None:
+                snap["kv"] = tuple(kv)
+            if rows is not None:
+                snap["rows"] = rows
+            self.rsnaps[req_id] = snap
+        self.batcher.submit(req)
+        return req
+
     # ---- crash-consistent serving snapshots ---------------------------
     def _snapshot_entry(self, req, s: int | None):
         """(scalar-manifest entry, array dict) for one live request.
@@ -1406,12 +1491,7 @@ class DecodeEngine:
         d = ckpt_dir or E.snapshot_dir
         if d is None:
             return None
-        if self._inflight is not None:        # quiesce: fold the horizon
-            fin = self._collect_horizon()
-            if fin is not None:
-                self._pending_fin = fin if self._pending_fin is None \
-                    else (self._pending_fin | fin)
-        self._drain_snapshots()
+        self.quiesce()
         order: list[int] = []
         ents: dict[str, dict] = {}
         arrs: dict[str, dict] = {}
@@ -1442,25 +1522,53 @@ class DecodeEngine:
         self.snapshot_saves += 1
         return path
 
+    def _rows_from_nested(self, nd):
+        """Rebuild a one-slot recurrent-carry pytree from its "/"-keyed
+        nested-dict form (a snapshot shard or handoff payload). The carry
+        contains tuples/lists the nesting flattened to string indices —
+        unflatten against a live one-slot gather so the structure
+        round-trips exactly."""
+        like = MDL.gather_rstate(self.state, [0])
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, _leaf in flat:
+            d = nd
+            for p in path:
+                d = d[str(getattr(p, "key", getattr(p, "idx", p)))]
+            leaves.append(d)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
     def restore_snapshot(self, ckpt_dir=None, step: int | None = None):
         """Rebuild the serving state of the latest (or given) snapshot into
         THIS engine — call on a freshly constructed engine with the same
         model/engine config, then ``run()``: warm requests restore their KV
         (and carry) and continue mid-stream, cold ones re-prefill
-        deterministically, done ones just republish their outputs. Returns
-        the restored step, or None when no complete snapshot exists."""
-        import json as _json
-        from pathlib import Path as _Path
+        deterministically, done ones just republish their outputs.
+
+        Every candidate step is FULLY validated (manifest parse, shard
+        load, per-array crc32) before anything is applied: a torn or
+        bit-flipped snapshot is counted in ``snapshot_rejects`` and
+        skipped, falling back to the next-older step — restore degrades,
+        it never half-applies. Returns the restored step, or None when no
+        intact snapshot exists (the caller's cold-start path)."""
         from repro.runtime import checkpoint as CKPT
-        E = self.ecfg
-        d = ckpt_dir or E.snapshot_dir
+        d = ckpt_dir or self.ecfg.snapshot_dir
         if d is None:
             return None
-        if step is None:
-            step = CKPT.latest_step(d)
-            if step is None:
-                return None
-        step_dir = _Path(d) / f"step_{step:08d}"
+        cands = ([step] if step is not None
+                 else sorted(CKPT.valid_steps(d), reverse=True))
+        for cand in cands:
+            if not CKPT.verify_step(d, cand):
+                self.snapshot_rejects += 1
+                continue
+            return self._restore_step(d, cand)
+        return None
+
+    def _restore_step(self, ckpt_dir, step: int):
+        """Apply one verified snapshot step (see ``restore_snapshot``)."""
+        import json as _json
+        from pathlib import Path as _Path
+        step_dir = _Path(ckpt_dir) / f"step_{step:08d}"
         extra = _json.loads(
             (step_dir / "manifest.json").read_text())["extra"]
         data = np.load(step_dir / "shard_00000.npz")
@@ -1474,46 +1582,20 @@ class DecodeEngine:
         if "dev_key" in nested:
             self.dev.key = jnp.asarray(nested["dev_key"])
         reqs = nested.get("reqs", {})
-
-        def _rows_like(nd):
-            # the carry pytree contains tuples/lists the "/"-keyed nesting
-            # flattened to string indices — unflatten against a live
-            # one-slot gather so the structure round-trips exactly
-            like = MDL.gather_rstate(self.state, [0])
-            flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-            leaves = []
-            for path, _leaf in flat:
-                d = nd
-                for p in path:
-                    d = d[str(getattr(p, "key", getattr(p, "idx", p)))]
-                leaves.append(d)
-            return jax.tree_util.tree_unflatten(treedef, leaves)
-        # warm restores ride the preemption-snapshot machinery; slot-mode
-        # prefill is the recompute reference and never consumes snapshots
-        warm_ok = E.state_resume and self.prefiller.name != "slot"
         for rid_s in map(str, extra["order"]):
             ent = extra["reqs"][rid_s]
             rid = int(rid_s)
             a = reqs.get(rid_s, {})
-            self.prompts[rid] = np.asarray(a["prompt"], np.int32)
-            self.outputs[rid] = [int(t) for t in
-                                 np.asarray(a.get("out", ()), np.int32)]
-            self.submit_t[rid] = time.perf_counter()
-            if ent["state"] == "done":         # finished during quiesce
+            prompt = np.asarray(a["prompt"], np.int32)
+            out = [int(t) for t in np.asarray(a.get("out", ()), np.int32)]
+            if ent["state"] == "done":         # finished during quiesce:
+                self.prompts[rid] = prompt     # republish, don't re-run
+                self.outputs[rid] = out
+                self.submit_t[rid] = time.perf_counter()
                 continue
-            self.tel.on_submit(rid, len(self.prompts[rid]),
-                               int(ent["max_new"]), self.submit_t[rid])
-            req = Request(rid, int(ent["prompt_len"]), int(ent["max_new"]))
-            if self.prefiller.name == "chunked":
-                req.chunked_prefill = True
-                req.prefill_done = False
-            if ent["state"] == "warm" and warm_ok:
-                snap: dict[str, Any] = {"len": int(ent["depth"])}
-                if "kv_k" in a:
-                    snap["kv"] = (a["kv_k"], a["kv_v"])
-                if "rows" in a:
-                    snap["rows"] = _rows_like(a["rows"])
-                self.rsnaps[rid] = snap
-            self.batcher.submit(req)
+            kv = (a["kv_k"], a["kv_v"]) if "kv_k" in a else None
+            rows = (self._rows_from_nested(a["rows"])
+                    if "rows" in a else None)
+            self.adopt_request(rid, ent, prompt, out, kv=kv, rows=rows)
         self.snapshot_restores += 1
         return step

@@ -144,6 +144,15 @@ class MemoryAwarePolicy(SchedulingPolicy):
         return best
 
 
+def route_least_loaded(loads: dict[int, float]) -> int | None:
+    """Router-side engine pick for the cluster (``serving/cluster.py``):
+    the candidate with the least outstanding work, ties broken toward the
+    lowest engine index so routing is deterministic across replays."""
+    if not loads:
+        return None
+    return min(loads, key=lambda ix: (loads[ix], ix))
+
+
 def make_policy(name, **kw) -> SchedulingPolicy:
     """Resolve a policy by name ('fcfs' | 'sjf' | 'memory_aware') or pass a
     SchedulingPolicy instance through."""

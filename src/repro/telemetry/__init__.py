@@ -117,7 +117,8 @@ class Telemetry:
                "requests drained off dead rows into re-queued prefills",
                kind="counter")
         ab = engine.abort_counts
-        for reason in ("client", "deadline", "nan", "shed", "chaos"):
+        for reason in ("client", "deadline", "nan", "shed", "chaos",
+                       "handoff", "stale"):
             r.bind("aborts_total", lambda rr=reason: ab.get(rr, 0),
                    "terminal teardowns by reason", kind="counter",
                    labels={"reason": reason})
@@ -130,6 +131,10 @@ class Telemetry:
         r.bind("engine_snapshot_restores_total",
                lambda: engine.snapshot_restores,
                "engine starts restored from a serving snapshot",
+               kind="counter")
+        r.bind("engine_snapshot_rejects_total",
+               lambda: engine.snapshot_rejects,
+               "torn/corrupt snapshot steps rejected before restore",
                kind="counter")
         if engine.faults.enabled:
             fc = engine.faults.counts

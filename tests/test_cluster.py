@@ -1,0 +1,306 @@
+"""Disaggregated serving cluster (prefill/decode split + crash-safe KV
+handoff, serving/cluster.py) and the handoff wire format
+(kvcache/handoff.py).
+
+The load-bearing contract everywhere: the disaggregated pool is
+token-identical (greedy) to a single colocated engine — through clean
+handoffs, torn/corrupted transfers, destination timeouts, engine deaths
+(cold re-drive AND warm snapshot restore), and role collapse. Plus the
+drain contract per surviving engine: no leaked pages or per-request
+state."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kvcache import handoff as HO
+from repro.models import model as MDL
+from repro.runtime.faults import FaultConfig
+from repro.serving import (ClusterConfig, DecodeEngine, EngineCluster,
+                           EngineConfig)
+
+PAGE = 4
+_PARAMS: dict = {}
+
+
+def _params(name="llama3.2-1b"):
+    if name not in _PARAMS:
+        cfg = replace(reduced(get_config(name)), dtype="float32")
+        _PARAMS[name] = (cfg, MDL.init_params(cfg, jax.random.PRNGKey(0),
+                                              jnp.float32))
+    return _PARAMS[name]
+
+
+def _ecfg(**kw):
+    base = dict(n_slots=3, page_size=PAGE, n_pages=96, max_context=64,
+                eos_token=-1)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _prompts(n, seed=0, arch="llama3.2-1b"):
+    cfg, _ = _params(arch)
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 20)))
+            for _ in range(n)]
+
+
+def _ref(prompts, max_new=5, arch="llama3.2-1b", **ekw):
+    cfg, params = _params(arch)
+    eng = DecodeEngine(cfg, _ecfg(**ekw), params)
+    for r, p in enumerate(prompts):
+        eng.submit(r, p, max_new)
+    return {k: list(v) for k, v in eng.run(2000).items()}
+
+
+def _cluster(ccfg=None, arch="llama3.2-1b", **ekw):
+    cfg, params = _params(arch)
+    return EngineCluster(cfg, _ecfg(**ekw), ccfg or ClusterConfig(), params)
+
+
+def _run(cl, prompts, max_new=5):
+    for r, p in enumerate(prompts):
+        cl.submit(r, p, max_new)
+    return {k: list(v) for k, v in cl.run(2000).items()}
+
+
+def _assert_cluster_drained(cl, n):
+    assert cl.done()
+    term = sum(1 for rec in cl.reqs.values()
+               if rec["state"] in ("done", "aborted"))
+    assert term == n == len(cl.reqs)
+    for h in cl.handles:
+        if not h.alive:
+            continue
+        eng = h.eng
+        assert eng.batcher.done() and eng._inflight is None
+        assert eng.alloc.pages_in_use == (
+            eng.cache.tree.device_pages() if eng.cache is not None else 0)
+        assert not eng.rsnaps
+        assert not eng.deadline_t
+        assert not eng._abort_req
+
+
+# ---------------------------------------------------------------------------
+# handoff wire format
+# ---------------------------------------------------------------------------
+
+def test_handoff_roundtrip_and_nested_arrays():
+    ent = {"prompt_len": 9, "max_new": 4, "state": "warm", "depth": 9}
+    arrs = {"prompt": np.arange(8, dtype=np.int32),
+            "out": np.asarray([7], np.int32),
+            "rows": {"ssm": {"0": np.ones((1, 2), np.float32)}}}
+    h = HO.pack(3, ent, arrs)
+    got = HO.decode(HO.encode(h))
+    assert got.req_id == 3 and got.entry == ent
+    nested = HO.nested_arrays(got)
+    assert np.array_equal(nested["prompt"], arrs["prompt"])
+    assert np.array_equal(nested["rows"]["ssm"]["0"],
+                          arrs["rows"]["ssm"]["0"])
+
+
+@pytest.mark.parametrize("damage", [HO.tear, HO.flip])
+def test_handoff_detects_damage(damage):
+    """Every torn/flipped variant of a blob must raise HandoffError before
+    anything is constructed — a half-applied transfer is the one outcome
+    the manifest gating exists to prevent."""
+    h = HO.pack(0, {"prompt_len": 4, "max_new": 2, "state": "cold"},
+                {"prompt": np.arange(4, dtype=np.int32),
+                 "out": np.asarray([1], np.int32)})
+    blob = HO.encode(h)
+    for salt in range(12):
+        with pytest.raises(HO.HandoffError):
+            HO.decode(damage(blob, salt))
+    HO.decode(blob)                              # pristine still decodes
+
+
+# ---------------------------------------------------------------------------
+# disaggregated == colocated (token identity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["slot", "batched", "chunked"])
+def test_disagg_token_identical_to_colocated(mode):
+    prompts = _prompts(6)
+    ref = _ref(prompts, prefill_mode=mode)
+    cl = _cluster(prefill_mode=mode)
+    outs = _run(cl, prompts)
+    assert outs == ref
+    assert cl.counters["handoffs"] == 6
+    assert cl.counters["handoff_ok"] == 6
+    _assert_cluster_drained(cl, 6)
+
+
+def test_disagg_recurrent_carry_handoff():
+    """Hybrid-SSM handoff moves the recurrent carry with the KV pages; the
+    decode engine re-seats it warm (no re-prefill) and stays identical."""
+    prompts = _prompts(4, arch="zamba2-1.2b")
+    ref = _ref(prompts, max_new=6, arch="zamba2-1.2b")
+    cl = _cluster(arch="zamba2-1.2b")
+    outs = _run(cl, prompts, max_new=6)
+    assert outs == ref
+    assert cl.counters["handoff_ok"] == 4
+    dec = cl.handles[1].eng
+    assert dec.rstate_restores >= 1              # carries arrived warm
+    _assert_cluster_drained(cl, 4)
+
+
+def test_colocated_cluster_matches_single_engine():
+    prompts = _prompts(6)
+    ref = _ref(prompts)
+    cl = _cluster(ClusterConfig(colocated=True, n_prefill=1, n_decode=0))
+    outs = _run(cl, prompts)
+    assert outs == ref
+    assert cl.counters["handoffs"] == 0          # no transfers when colocated
+    _assert_cluster_drained(cl, 6)
+
+
+# ---------------------------------------------------------------------------
+# corrupted / torn transfers: retry with backoff, then cold re-drive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["handoff_torn", "handoff_corrupt"])
+def test_handoff_damage_retries_then_identical(kind):
+    prompts = _prompts(6)
+    ref = _ref(prompts)
+    cl = _cluster(ClusterConfig(
+        faults=FaultConfig(seed=5, **{f"{kind}_p": 0.5})))
+    outs = _run(cl, prompts)
+    assert outs == ref
+    assert cl.counters["handoff_retries"] >= 1
+    assert cl.faults.counts.get(kind, 0) >= 1
+    _assert_cluster_drained(cl, 6)
+
+
+def test_handoff_all_corrupt_degrades_to_cold_redrive():
+    """Every transmission corrupted: retries exhaust and each handoff
+    degrades to a cold re-prefill on the destination — slower, never
+    wrong."""
+    prompts = _prompts(6)
+    ref = _ref(prompts)
+    cl = _cluster(ClusterConfig(
+        handoff_retries=3,
+        faults=FaultConfig(seed=3, handoff_corrupt_p=1.0)))
+    outs = _run(cl, prompts)
+    assert outs == ref
+    assert cl.counters["handoff_ok"] == 0
+    assert cl.counters["handoff_redrives"] == 6
+    assert cl.counters["handoff_retries"] == 6 * 4   # 1 try + 3 retries each
+    _assert_cluster_drained(cl, 6)
+
+
+def test_handoff_timeout_redispatches_to_healthy_engine():
+    """Kill the routed destination while transfers are pending: the
+    per-handoff deadline fires and the handoff is re-dispatched to the
+    surviving decode engine, token-identically."""
+    prompts = _prompts(4)
+    ref = _ref(prompts)
+    cl = _cluster(ClusterConfig(n_prefill=1, n_decode=2, transfer_ticks=3,
+                                handoff_timeout=2))
+    for r, p in enumerate(prompts):
+        cl.submit(r, p, 5)
+    # run until transfers are pending, then kill their destination directly
+    while not cl._pending:
+        cl.tick()
+    victim = {ho.dst_ix for ho in cl._pending}
+    assert len(victim) >= 1
+    cl._kill(cl.handles[victim.pop()])
+    outs = {k: list(v) for k, v in cl.run(2000).items()}
+    assert outs == ref
+    assert cl.counters["handoff_timeouts"] >= 1
+    assert cl.counters["handoff_redispatches"] >= 1
+    _assert_cluster_drained(cl, 4)
+
+
+# ---------------------------------------------------------------------------
+# engine death: cold re-drive, warm snapshot restore, role collapse
+# ---------------------------------------------------------------------------
+
+def test_engine_death_cold_redrive_token_identical():
+    prompts = _prompts(6)
+    ref = _ref(prompts, max_new=8)
+    cl = _cluster(ClusterConfig(
+        faults=FaultConfig(seed=11, engine_death_p=0.05, start_tick=3,
+                           max_faults=1)))
+    outs = _run(cl, prompts, max_new=8)
+    assert outs == ref
+    assert cl.counters["engine_deaths"] == 1
+    assert cl.counters["engine_restores"] == 0   # no snapshots: cold path
+    # one role died -> sticky collapse to a colocated single-engine pool
+    assert cl.degraded_mode & 1
+    assert cl.counters["role_collapses"] >= 1
+    assert sum(h.alive for h in cl.handles) == 1
+    assert all(h.role == "both" for h in cl.handles if h.alive)
+    _assert_cluster_drained(cl, 6)
+
+
+def test_engine_death_warm_restore_token_identical(tmp_path):
+    """With per-engine serving snapshots the dead engine is rebuilt warm
+    from its last step and resumes mid-stream — no collapse, both roles
+    stay covered, outputs identical."""
+    prompts = _prompts(6)
+    ref = _ref(prompts, max_new=8)
+    cl = _cluster(ClusterConfig(
+        snapshot_dir=str(tmp_path), snapshot_every=2,
+        faults=FaultConfig(seed=2, engine_death_p=0.04, start_tick=6,
+                           max_faults=1)))
+    outs = _run(cl, prompts, max_new=8)
+    assert outs == ref
+    assert cl.counters["engine_deaths"] == 1
+    assert cl.counters["engine_restores"] == 1
+    assert cl.degraded_mode == 0                 # restore kept both roles
+    assert sum(h.alive for h in cl.handles) == 2
+    _assert_cluster_drained(cl, 6)
+
+
+def test_all_engines_dead_goes_terminal():
+    """Nothing left to serve on: every live request aborts with
+    engine_death instead of hanging the router."""
+    prompts = _prompts(4)
+    cl = _cluster(ClusterConfig(
+        faults=FaultConfig(seed=7, engine_death_p=1.0)))
+    outs = _run(cl, prompts)
+    assert cl.counters["engine_deaths"] == 2
+    assert all(cl.aborted[r] == "engine_death" for r in range(4))
+    assert all(outs[r] == [] for r in range(4))
+    assert cl.done()
+
+
+# ---------------------------------------------------------------------------
+# router backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_sheds_at_router():
+    prompts = _prompts(12)
+    cl = _cluster(ClusterConfig(max_backlog=4))
+    accepted = [cl.submit(r, p, 4) for r, p in enumerate(prompts)]
+    outs = {k: list(v) for k, v in cl.run(2000).items()}
+    n_ok = sum(accepted)
+    assert 0 < n_ok < 12                        # some flowed, some shed
+    assert cl.counters["shed"] == 12 - n_ok
+    for r, ok in enumerate(accepted):
+        if ok:
+            assert outs[r]                      # accepted => served
+        else:
+            assert cl.aborted[r] == "shed" and outs[r] == []
+    _assert_cluster_drained(cl, 12)
+
+
+def test_cluster_telemetry_counters_exposed():
+    from repro.telemetry import TelemetryConfig, parse_exposition
+    prompts = _prompts(4)
+    cl = _cluster(ClusterConfig(telemetry=TelemetryConfig()),
+                  telemetry=TelemetryConfig())
+    _run(cl, prompts)
+    samples = parse_exposition(cl.tel.registry.render())
+    assert samples["repro_cluster_handoffs_total"] == 4.0
+    g = cl.tel.registry.get
+    assert g("cluster_handoff_ok_total") == 4.0
+    assert g("cluster_engines_healthy") == 2.0
+    assert g("cluster_pending_handoffs") == 0.0
+    # per-engine registries: each pool member namespaced by its index
+    for ix, h in enumerate(cl.handles):
+        etext = h.eng.tel.registry.render()
+        assert f"repro_e{ix}_engine_steps_total" in etext

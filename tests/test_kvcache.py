@@ -149,7 +149,27 @@ def test_lru_eviction_spares_pinned_paths():
     assert cache.reclaimable() == 2
 
 
-def test_host_offload_roundtrip_preserves_payload():
+def test_reclaimable_excludes_request_referenced_pages():
+    """A tree page a running request still shares would survive eviction
+    (the request's reference keeps it resident), so it must not be
+    advertised as reclaimable admission capacity — the old node-granular
+    count let admission overcommit into mid-decode preemptions."""
+    alloc, cache = make_cache(n_pages=16)
+    a = np.arange(0, 8, dtype=np.int32)         # 2 pages into the tree
+    alloc.admit(0, len(a))
+    cache.insert(0, a)
+    alloc.free(0)
+    assert cache.reclaimable() == 2             # tree-only refs: evictable
+    hit = cache.lookup(1, np.concatenate([a, [1, 2]]).astype(np.int32))
+    assert len(hit.pages) == 2
+    alloc.admit_shared(1, hit.pages, len(a) + 2)
+    cache.release(1)                            # unpinned (node ref == 0)...
+    # ...but the request still owns a reference on both shared pages, so
+    # evicting the node could not actually free them
+    assert cache.reclaimable() == 0
+    assert alloc.available_pages() == alloc.free_page_count
+    alloc.free(1)                               # request gone: refs drop to
+    assert cache.reclaimable() == 2             # the tree's own — capacity
     """swap-out -> drain -> match (swap-in) -> apply restores page bytes."""
     import jax.numpy as jnp
     from repro.core.paged_kv import PoolSpec, init_pool

@@ -355,3 +355,111 @@ def test_snapshot_restore_empty_dir(tmp_path):
     _submit(eng, 2)
     eng.run(500)
     assert eng.batcher.stats.completed == 2
+
+
+# ---------------------------------------------------------------------------
+# torn / corrupted snapshots: reject cleanly, never half-apply
+# ---------------------------------------------------------------------------
+
+def _snap_run(tmp_path, every=2, ticks=7):
+    """A mid-run crash leaving >= 2 snapshot steps behind, plus the clean
+    reference outputs the restore must reproduce."""
+    clean = _engine()
+    _submit(clean, 6, max_new=8)
+    ref = {k: list(v) for k, v in clean.run(500).items()}
+    eng = _engine(snapshot_dir=str(tmp_path), snapshot_every=every)
+    _submit(eng, 6, max_new=8)
+    for _ in range(ticks):
+        eng.tick()
+    steps = sorted(int(d.name.split("_")[1])
+                   for d in tmp_path.glob("step_*"))
+    assert len(steps) >= 2
+    return ref, steps
+
+
+def test_snapshot_restore_rejects_torn_manifest(tmp_path):
+    """Truncating the newest manifest mid-file un-commits that step (the
+    manifest IS the commit point): restore skips it without touching the
+    payload, falls back to the previous intact step, and still finishes
+    every request token-identically."""
+    ref, steps = _snap_run(tmp_path)
+    mf = tmp_path / f"step_{steps[-1]:08d}" / "manifest.json"
+    text = mf.read_text()
+    mf.write_text(text[:len(text) // 2])        # torn mid-write
+    eng2 = _engine(snapshot_dir=str(tmp_path))
+    assert eng2.restore_snapshot() == steps[-2]  # fell back, no half-apply
+    outs = {k: list(v) for k, v in eng2.run(500).items()}
+    assert outs == ref
+    _assert_leak_free(eng2)
+
+
+def test_snapshot_restore_rejects_corrupt_payload(tmp_path):
+    """A bit flip in a committed step's KV payload fails the manifest's
+    per-array crc32: the step is rejected (counted in snapshot_rejects)
+    BEFORE anything is applied and restore degrades to the older step."""
+    ref, steps = _snap_run(tmp_path)
+    shard = tmp_path / f"step_{steps[-1]:08d}" / "shard_00000.npz"
+    blob = bytearray(shard.read_bytes())
+    blob[len(blob) // 2] ^= 0x40                # flip one payload bit
+    shard.write_bytes(bytes(blob))
+    eng2 = _engine(snapshot_dir=str(tmp_path))
+    assert eng2.restore_snapshot() == steps[-2]
+    assert eng2.snapshot_rejects == 1
+    outs = {k: list(v) for k, v in eng2.run(500).items()}
+    assert outs == ref
+    _assert_leak_free(eng2)
+
+
+def test_snapshot_restore_all_corrupt_falls_back_cold(tmp_path):
+    """Every step damaged -> restore returns None (nothing half-applied,
+    every reject counted); a cold re-submit then reproduces the reference
+    run exactly — the deterministic re-prefill fallback."""
+    ref, steps = _snap_run(tmp_path)
+    for st in steps:
+        shard = tmp_path / f"step_{st:08d}" / "shard_00000.npz"
+        blob = bytearray(shard.read_bytes())
+        blob[len(blob) // 2] ^= 0x40
+        shard.write_bytes(bytes(blob))
+    eng2 = _engine(snapshot_dir=str(tmp_path))
+    assert eng2.restore_snapshot() is None
+    assert eng2.snapshot_rejects == len(steps)
+    assert not eng2.prompts                     # truly nothing applied
+    _submit(eng2, 6, max_new=8)                 # cold re-prefill fallback
+    outs = {k: list(v) for k, v in eng2.run(500).items()}
+    assert outs == ref
+    _assert_leak_free(eng2)
+
+
+# ---------------------------------------------------------------------------
+# swap-failure retry/backoff (before the degradation ladder)
+# ---------------------------------------------------------------------------
+
+def test_swap_retry_backoff_before_degradation():
+    """The first swap_retry_limit consecutive swap-in failures are absorbed
+    as retries (TierStats.swap_retries) behind a capped exponential backoff;
+    only failures past the budget advance swap_in_fails toward the
+    degrade_after ladder — and the tier's counters stay visible even after
+    the ladder drops it."""
+    eng = _engine(FaultConfig(seed=2, swap_fail_p=0.9), n_pages=32,
+                  prefix_cache=True, host_pages=32, offload_high=0.4,
+                  offload_low=0.2, degrade_after=2, swap_retry_limit=2,
+                  swap_backoff_cap=4)
+    cfg, _ = _params()
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, size=12)
+    for r in range(8):
+        eng.submit(r, np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, size=5)]), 6)
+    eng.run(2000)
+    assert eng.batcher.stats.completed + len(eng.aborted) == 8
+    sd = eng.cache.stats_dict()
+    fired = eng.faults.counts.get("swap_fail", 0)
+    if fired:
+        # the first failure of any streak is always absorbed as a retry
+        assert sd["swap_retries"] >= 1
+        # every failure landed somewhere: retry budget or the ladder
+        assert sd["swap_retries"] + sd["swap_in_fails"] >= fired
+    if eng.degraded_mode & 4:
+        assert eng.cache.host is None
+        assert "swap_retries" in sd             # stats survive the drop
+    _assert_leak_free(eng)
