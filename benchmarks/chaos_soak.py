@@ -31,6 +31,7 @@ import time
 from dataclasses import replace
 
 import numpy as np
+from repro.serving import Request as Req
 
 WATCHDOG_S = 240.0          # per-scenario wall budget (CI CPU, cold jit)
 
@@ -62,8 +63,8 @@ def _submit(eng, n, max_new, seed=0):
     cfg, _ = _setup()
     rng = np.random.default_rng(seed)
     for r in range(n):
-        eng.submit(r, rng.integers(0, cfg.vocab_size,
-                                   size=int(rng.integers(4, 20))), max_new)
+        eng.submit(Req(r, rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(4, 20))), max_new))
 
 
 def _assert_drained(eng, n_submitted: int, name: str) -> dict:
@@ -116,8 +117,8 @@ def scenario_swap_faults(seed: int):
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, cfg.vocab_size, size=12)
     for r in range(12):     # shared prefixes force radix traffic + offload
-        eng.submit(r, np.concatenate(
-            [shared, rng.integers(0, cfg.vocab_size, size=6)]), 8)
+        eng.submit(Req(r, np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, size=6)]), 8))
     eng.run(5000)
     stats = _assert_drained(eng, 12, f"swap_faults[{seed}]")
     sd = eng.cache.stats_dict()
@@ -140,7 +141,7 @@ def scenario_abort_deadline(seed: int):
     """Client aborts + tight deadlines while requests are mid-stream."""
     eng = _engine()
     _submit(eng, 6, 30, seed=seed)
-    eng.submit(100, np.arange(1, 10), 30, deadline_s=1e-6)  # expires at t1
+    eng.submit(Req(100, np.arange(1, 10), 30, deadline_s=1e-6))  # expires at t1
     for _ in range(3):
         eng.tick()
     for rid in (0, 2):
@@ -256,7 +257,7 @@ def scenario_disagg(seed: int):
                for _ in range(14)]
     clean = _engine()
     for r, p in enumerate(prompts):
-        clean.submit(r, p, 8)
+        clean.submit(Req(r, p, 8))
     ref = {k: list(v) for k, v in clean.run(5000).items()}
     import shutil
     import tempfile
@@ -271,7 +272,7 @@ def scenario_disagg(seed: int):
                            start_tick=2, max_faults=6)), params)
     try:
         for r, p in enumerate(prompts):
-            cl.submit(r, p, 8)
+            cl.submit(Req(r, p, 8))
         outs = {k: list(v) for k, v in cl.run(5000).items()}
     finally:
         shutil.rmtree(d, ignore_errors=True)

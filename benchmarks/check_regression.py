@@ -1,5 +1,6 @@
 """Bench-regression gate: compare fresh ``--json`` bench runs against the
-committed baselines (``BENCH_serving.json`` / ``BENCH_kernels.json``).
+committed baselines (``BENCH_serving.json`` / ``BENCH_kernels.json`` /
+``BENCH_slo.json``).
 
 CI runners differ wildly in absolute speed, and CPU wall-clock on shared
 runners is noisy, so the gate is built from three layers of decreasing
@@ -24,6 +25,10 @@ trust:
   signal, so there it is advisory and TTFT + counters carry the gate.
 * **kernel latency ratios** — advisory warnings only: interpret-mode
   kernel timings are too noisy for a hard gate.
+
+``slo`` rows (``slo_bench.py``) replay the committed trace on a virtual
+clock, so they carry no wall-clock at all: goodput is ratchet-gated
+(may rise, never fall) and every trace counter gates on exact equality.
 
 ``--absolute`` additionally gates raw ``decode_tok_s``/``ttft_ms`` with the
 same tolerance — useful locally on a quiet machine, not in CI.
@@ -215,6 +220,42 @@ def check_serving(base: dict, fresh_runs: list[dict], tol: float,
     return fails
 
 
+#: slo rows are produced on a virtual clock — every field is a
+#: deterministic function of the code and the committed trace, so each
+#: gates on EXACT equality (goodput may only move UP; the deterministic
+#: trace counters may not move at all). "policy" keys the row.
+SLO_EXACT = ("arrivals", "accepted", "shed", "abort_events", "ticks",
+             "completed", "slo_attained", "tokens", "aborted_client",
+             "aborted_deadline", "preempted", "priority_preempted")
+
+
+def check_slo(base: dict, fresh_runs: list[dict]) -> list[str]:
+    fails: list[str] = []
+    brows = {(r["policy"], r.get("trace", "")): r for r in base["rows"]}
+    for i, fresh in enumerate(fresh_runs):
+        tag = f"fresh run {i + 1}" if len(fresh_runs) > 1 else "fresh run"
+        frows = {(r["policy"], r.get("trace", "")): r for r in fresh["rows"]}
+        missing = sorted(set(brows) - set(frows))
+        if missing:
+            fails.append(f"slo ({tag}): baseline rows missing: {missing}")
+        for key in sorted(set(brows) & set(frows)):
+            br, fr = brows[key], frows[key]
+            # goodput is ratchet-gated: a scheduling change may improve
+            # it (refresh the baseline to bank the gain) but never drop it
+            if fr.get("goodput") is None \
+                    or fr["goodput"] < br["goodput"] - 1e-9:
+                fails.append(f"slo {key} ({tag}): goodput regressed "
+                             f"{br['goodput']:.4f} -> {fr.get('goodput')}")
+            for c in SLO_EXACT:
+                if br.get(c) is None:
+                    continue
+                if fr.get(c) != br[c]:
+                    fails.append(f"slo {key} ({tag}): {c} changed "
+                                 f"{br[c]} -> {fr.get(c)} (deterministic "
+                                 f"replay drifted)")
+    return fails
+
+
 def _max_err(doc: dict) -> float:
     err = doc.get("maxerr", 0.0)
     if isinstance(err, dict):
@@ -284,6 +325,8 @@ def main(argv=None) -> int:
         fails = check_serving(base, fresh_runs, args.tol, args.absolute)
     elif base.get("bench") == "kernels":
         fails = check_kernels(base, fresh_runs, args.tol)
+    elif base.get("bench") == "slo":
+        fails = check_slo(base, fresh_runs)
     else:
         print(f"unknown bench kind {base.get('bench')!r}")
         return 1

@@ -24,6 +24,7 @@ import time
 from dataclasses import replace
 
 import numpy as np
+from repro.serving import Request as Req
 
 _PARAMS = {}
 PAGE = 8
@@ -61,8 +62,8 @@ def _wave(eng, cfg, wave_id, *, system, shared_frac, requests=8,
     for i in range(requests):
         rid = 1000 * wave_id + i
         tail = rng.integers(0, cfg.vocab_size, size=prompt_len - k)
-        eng.submit(rid, np.concatenate([system[:k], tail]).astype(np.int32),
-                   new_tokens)
+        eng.submit(Req(rid, np.concatenate([system[:k], tail]).astype(np.int32),
+                   new_tokens))
         ids.append(rid)
     first_tok: dict[int, float] = {}
     peak_pages = peak_kv = 0

@@ -34,6 +34,7 @@ import time
 from dataclasses import replace
 
 import numpy as np
+from repro.serving import Request as Req
 
 _PARAMS = {}
 _SPEC = {}
@@ -119,17 +120,17 @@ def bench(mode: str, *, arch: str = "llama3.2-1b", requests: int = 8,
         wlens = None
     rng = np.random.default_rng(7)
     for i in range(warmup if wlens is None else len(wlens)):
-        eng.submit(1000 + i,
+        eng.submit(Req(1000 + i,
                    rng.integers(0, cfg.vocab_size,
                                 size=(wlens[i] if wlens is not None
                                       else int(rng.integers(8, max_prompt)))),
-                   new_tokens)
+                   new_tokens))
     eng.run(10_000)
     tm0 = dict(eng.timing.as_dict())
     rng = np.random.default_rng(0)
     for i in range(requests):
         plen = int(rng.integers(8, max_prompt))
-        eng.submit(i, rng.integers(0, cfg.vocab_size, size=plen), new_tokens)
+        eng.submit(Req(i, rng.integers(0, cfg.vocab_size, size=plen), new_tokens))
     t0 = time.perf_counter()
     eng.run(10_000)
     dt = time.perf_counter() - t0
@@ -208,17 +209,17 @@ def bench_disagg(*, arch: str = "llama3.2-1b", requests: int = 8,
                        ClusterConfig(n_prefill=1, n_decode=1), params)
     rng = np.random.default_rng(7)
     for i in range(warmup):
-        cl.submit(1000 + i,
+        cl.submit(Req(1000 + i,
                   rng.integers(0, cfg.vocab_size,
                                size=int(rng.integers(8, max_prompt))),
-                  new_tokens)
+                  new_tokens))
     cl.run(10_000)
     warm_handoffs = cl.counters["handoffs"]
     warm_ok = cl.counters["handoff_ok"]
     rng = np.random.default_rng(0)
     for i in range(requests):
         plen = int(rng.integers(8, max_prompt))
-        cl.submit(i, rng.integers(0, cfg.vocab_size, size=plen), new_tokens)
+        cl.submit(Req(i, rng.integers(0, cfg.vocab_size, size=plen), new_tokens))
     t0 = time.perf_counter()
     cl.run(10_000)
     dt = time.perf_counter() - t0

@@ -17,6 +17,7 @@ from repro.configs import get_config, reduced
 from repro.core.allocator import PageAllocator
 from repro.core.paged_kv import PoolSpec
 from repro.models import model as MDL
+from repro.serving import Request as Req
 
 arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-1b"
 cfg = replace(reduced(get_config(arch)), dtype="float32")
@@ -70,7 +71,7 @@ if cfg.family != "encdec":
     eng = DecodeEngine(cfg, ecfg, params)
     rng = np.random.default_rng(0)
     for r in range(3):
-        eng.submit(r, rng.integers(0, cfg.vocab_size, size=6), 4)
+        eng.submit(Req(r, rng.integers(0, cfg.vocab_size, size=6), 4))
     outs = eng.run(100)
     print(f"serving: completed={eng.batcher.stats.completed} "
           f"prefill={eng.prefiller.name} "

@@ -28,6 +28,7 @@ Three serving hooks (repro.serving builds on these):
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -57,6 +58,14 @@ class Request:
     # cache-insert paths against adopting never-written pages when a request
     # is admitted and preempted in the same tick.
     kv_written: bool = False
+    # SLO scheduling surface (PR 10): priority tier (higher = more urgent),
+    # submission timestamp in the engine's clock frame, and the immutable
+    # client-facing submission spec (serving.Request) policies and the
+    # tracker read SLO targets from. The scheduler itself only sorts on
+    # these; it never mutates the spec.
+    priority: int = 0
+    submit_t: float = 0.0
+    spec: object = None
 
     @property
     def total_len(self) -> int:
@@ -76,6 +85,9 @@ class SchedulerStats:
     # requests drained off a dead serving row into re-queued prefills.
     aborted: int = 0
     migrated: int = 0
+    # policy-driven preemptions (SLO tier starvation), a subset of
+    # ``preempted`` — pool-exhaustion preemptions are the remainder
+    priority_preempted: int = 0
     batch_trace: list = field(default_factory=list)
 
     @property
@@ -92,6 +104,10 @@ class ContinuousBatcher:
         self.max_context = max_context
         self.n_rows = n_rows
         self.policy = policy
+        # injectable time source: policies compute queue-waiting times and
+        # SLO budgets from this (the engine threads its own clock here, so
+        # virtual-time replay is deterministic end to end)
+        self.clock = time.perf_counter
         # prefix cache + token oracle (see module docstring)
         self.cache = cache
         self.cache_tokens = cache_tokens
@@ -513,12 +529,26 @@ class ContinuousBatcher:
                     self.slots[s] = None
                     self._snap_clear(s)
         admitted = self._try_admit()
+        # policy-driven preemption (SLO tier starvation): ask the policy
+        # for victim slots once per tick and route them through the SAME
+        # mid-tick preempt frame as allocator exhaustion below — identical
+        # requeue arithmetic, identical snapshot/restore resume, so a
+        # priority preemption is token-identical for the victim
+        victims: set = ()
+        if self.policy is not None and self.queue:
+            pv = getattr(self.policy, "preempt_victims", None)
+            if pv is not None:
+                victims = pv(self)
         active = []
         for s, req in enumerate(self.slots):
             if req is None or not req.prefill_done:
                 continue
             req.generated += 1
             self._ctx[s] = req.total_len
+            if s in victims:
+                self.stats.priority_preempted += 1
+                self._preempt(s, req)
+                continue
             # injected pool exhaustion: behave exactly as if ensure() had
             # raised — same preempt path, same requeue arithmetic — so the
             # chaos plan exercises the real recovery machinery

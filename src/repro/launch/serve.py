@@ -50,7 +50,8 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.data.pipeline import request_trace
-from repro.serving import DecodeEngine, EngineConfig
+from repro.serving import DecodeEngine, EngineConfig, Request
+from repro.serving.policies import available_policies
 
 
 def make_serve_tel_cfg(args):
@@ -213,7 +214,7 @@ def submit_trace(eng: DecodeEngine, args) -> None:
         if system is not None:
             k = min(int(plen * args.shared_frac), plen - 1)
             prompt[:k] = system[:k]
-        eng.submit(i, prompt, new)
+        eng.submit(Request(i, prompt, new))
 
 
 def main(argv=None):
@@ -231,8 +232,10 @@ def main(argv=None):
     ap.add_argument("--prefill-mode", default="batched",
                     choices=["slot", "batched", "chunked"])
     ap.add_argument("--chunk", type=int, default=32)
-    ap.add_argument("--sched-policy", default="fcfs",
-                    choices=["fcfs", "sjf", "memory_aware"])
+    # choices come from the policy registry (serving.policies) — a policy
+    # registered with @register_policy is immediately launchable here
+    ap.add_argument("--sched-policy", "--policy", dest="sched_policy",
+                    default="fcfs", choices=available_policies())
     ap.add_argument("--shared-frac", type=float, default=0.0,
                     help="fraction of each prompt drawn from a common "
                          "system prompt")

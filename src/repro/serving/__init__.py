@@ -9,11 +9,13 @@ mechanisms.
 """
 from repro.serving.cluster import ClusterConfig, EngineCluster, EngineHandle
 from repro.serving.engine import DecodeEngine, EngineConfig, EngineTiming
-from repro.serving.policies import (FCFSPolicy, MemoryAwarePolicy,
-                                    SchedulingPolicy, SJFPolicy, make_policy,
-                                    route_least_loaded)
+from repro.serving.policies import (EDFPolicy, FCFSPolicy, MemoryAwarePolicy,
+                                    SchedulingPolicy, SJFPolicy, SLOPolicy,
+                                    available_policies, make_policy,
+                                    register_policy, route_least_loaded)
 from repro.serving.prefill import (BatchedPrefiller, ChunkedPrefiller,
                                    SlotPrefiller, make_prefiller)
+from repro.serving.request import Request
 from repro.serving.sampling import (Sampler, greedy_sample,
                                     make_callback_sampler, make_sampler,
                                     make_scan_sampler, make_verifier)
@@ -21,8 +23,11 @@ from repro.serving.sampling import (Sampler, greedy_sample,
 __all__ = [
     "DecodeEngine", "EngineConfig", "EngineTiming",
     "EngineCluster", "ClusterConfig", "EngineHandle",
+    "Request",
     "SchedulingPolicy", "FCFSPolicy", "SJFPolicy", "MemoryAwarePolicy",
-    "make_policy", "route_least_loaded",
+    "EDFPolicy", "SLOPolicy",
+    "make_policy", "register_policy", "available_policies",
+    "route_least_loaded",
     "SlotPrefiller", "BatchedPrefiller", "ChunkedPrefiller", "make_prefiller",
     "Sampler", "greedy_sample", "make_callback_sampler", "make_sampler",
     "make_scan_sampler", "make_verifier",

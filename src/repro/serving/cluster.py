@@ -52,6 +52,7 @@ from repro.runtime.elastic import plan_role_collapse
 from repro.runtime.faults import make_faults
 from repro.serving.engine import DecodeEngine
 from repro.serving.policies import route_least_loaded
+from repro.serving.request import Request as RequestSpec
 from repro.telemetry import TelemetryConfig, make_telemetry
 
 
@@ -213,22 +214,37 @@ class EngineCluster:
     # ------------------------------------------------------------------
     # public API (mirrors DecodeEngine's submit/tick/run surface)
     # ------------------------------------------------------------------
-    def submit(self, req_id: int, prompt, max_new_tokens: int) -> bool:
-        """Route a request into the cluster. Returns False when the decode
-        pool is saturated and the request was shed at the router instead
-        (terminal immediately, reason ``shed``, empty output)."""
-        prompt = np.asarray(prompt, np.int32)
+    def submit(self, req: "RequestSpec | int", prompt=None,
+               max_new_tokens: int | None = None) -> bool:
+        """Route a request into the cluster, described by a
+        ``serving.Request`` spec (the legacy positional form survives as a
+        deprecated shim, mirroring ``DecodeEngine.submit``). Returns False
+        when the decode pool is saturated and the request was shed at the
+        router instead (terminal immediately, reason ``shed``, empty
+        output). The spec rides the request record, so a re-route after an
+        engine death re-submits with the same priority/SLO targets."""
+        if not isinstance(req, RequestSpec):
+            import warnings
+            warnings.warn(
+                "EngineCluster.submit(req_id, prompt, max_new_tokens) is "
+                "deprecated; pass a serving.Request spec",
+                DeprecationWarning, stacklevel=2)
+            req = RequestSpec(req, prompt, max_new_tokens)
+        req_id = req.req_id
+        prompt = np.asarray(req.prompt, np.int32)
         self.outputs[req_id] = []
         if self.ccfg.max_backlog \
                 and self._decode_load() >= self.ccfg.max_backlog:
             self.aborted[req_id] = "shed"
             self.counters["shed"] += 1
             self.reqs[req_id] = {"prompt": prompt,
-                                 "max_new": int(max_new_tokens),
+                                 "max_new": req.max_new_tokens,
+                                 "spec": req,
                                  "state": "aborted", "engine": None}
             return False
         self.reqs[req_id] = {"prompt": prompt,
-                             "max_new": int(max_new_tokens),
+                             "max_new": req.max_new_tokens,
+                             "spec": req,
                              "state": "routed", "engine": None}
         self.queue.append(req_id)
         return True
@@ -387,7 +403,8 @@ class EngineCluster:
                 h.eng.adopt_request(rid, self._cold_entry(rec, out),
                                     rec["prompt"], out)
             else:
-                h.eng.submit(rid, rec["prompt"], rec["max_new"])
+                h.eng.submit(rec.get("spec") or RequestSpec(
+                    rid, rec["prompt"], rec["max_new"]))
 
     def _complete(self, rec: dict, out: list[int]) -> bool:
         """True when the streamed output is already the full response
@@ -398,8 +415,12 @@ class EngineCluster:
 
     def _cold_entry(self, rec: dict, out: list[int]) -> dict:
         g = max(0, len(out) - 1)        # last sample's KV never landed
-        return {"prompt_len": len(rec["prompt"]) + g,
-                "max_new": max(1, rec["max_new"] - g), "state": "cold"}
+        ent = {"prompt_len": len(rec["prompt"]) + g,
+               "max_new": max(1, rec["max_new"] - g), "state": "cold"}
+        spec = rec.get("spec")
+        if spec is not None and spec.priority:
+            ent["priority"] = spec.priority
+        return ent
 
     # ------------------------------------------------------------------
     # streaming + terminal detection

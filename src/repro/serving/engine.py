@@ -43,6 +43,7 @@ sharding plan for the production layout.
 from __future__ import annotations
 
 import time
+import warnings
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -57,6 +58,7 @@ from repro.core.scheduler import ContinuousBatcher, Request
 from repro.models import model as MDL
 from repro.serving.policies import make_policy
 from repro.serving.prefill import make_prefiller
+from repro.serving.request import Request as RequestSpec
 from repro.serving.sampling import make_sampler, make_scan_sampler
 
 
@@ -155,6 +157,14 @@ class EngineConfig:
     # one explicitly; 0 = none. Expired requests are torn down at the next
     # tick's safe point wherever they are (queued, prefilling, decoding).
     default_deadline_s: float = 0.0
+    # injectable time source (zero-arg callable -> seconds). None = the
+    # wall clock (time.perf_counter). Deadlines, submit/first-token
+    # timestamps, the scheduler's SLO policies and the request tracker all
+    # read THIS clock, so a runtime.clock.VirtualClock makes trace replay
+    # and deadline expiry fully deterministic. Performance accounting
+    # (EngineTiming, Perfetto slices) stays on the wall clock regardless —
+    # it measures the machine, not the workload.
+    clock: Any = None
     # ---- graceful degradation ----
     # faults observed (injected pressure, repeated swap failures, NaN
     # quarantines) before the engine downgrades a tier: spec decoding ->
@@ -303,10 +313,15 @@ class DecodeEngine:
         self.alloc = PageAllocator(
             ecfg.n_pages, ecfg.n_shards, ecfg.page_size, policy=ecfg.policy,
             n_rows=ecfg.n_rows, static_max_pages=static_pages)
+        # behavioral time source (deadlines, SLO budgets, request
+        # timestamps); see EngineConfig.clock
+        self.clock = ecfg.clock if ecfg.clock is not None \
+            else time.perf_counter
         self.batcher = ContinuousBatcher(
             self.alloc, ecfg.n_slots, max_context=ecfg.max_context,
             n_rows=ecfg.n_rows, policy=make_policy(policy or ecfg.sched_policy),
             bt_width=self.pool_spec.max_pages_per_req)
+        self.batcher.clock = self.clock
         self.state = MDL.init_decode_state(cfg, self.pool_spec, ecfg.n_slots,
                                            dtype="float32")
         self.tokens = np.zeros((ecfg.n_slots,), np.int32)
@@ -480,33 +495,52 @@ class DecodeEngine:
                 tr.slice(track, name or acc, t0, dt)
 
     # ------------------------------------------------------------------
-    def submit(self, req_id: int, prompt: np.ndarray,
-               max_new_tokens: int, *,
+    def submit(self, req: RequestSpec | int, prompt: np.ndarray = None,
+               max_new_tokens: int | None = None, *,
                deadline_s: float | None = None) -> bool:
-        """Enqueue a request. Returns False when the bounded queue is full
-        and the request was load-shed instead (terminal immediately, reason
-        ``shed``, empty output). ``deadline_s`` (or the engine default)
-        arms a wall-clock deadline; an expired request is torn down at the
-        next tick wherever it is in its lifecycle."""
-        self.prompts[req_id] = np.asarray(prompt, np.int32)
+        """Enqueue a request described by a ``serving.Request`` spec.
+        Returns False when the bounded queue is full and the request was
+        load-shed instead (terminal immediately, reason ``shed``, empty
+        output). ``spec.deadline_s`` (or the engine default) arms a
+        deadline in the engine's clock frame; an expired request is torn
+        down at the next tick wherever it is in its lifecycle. Priority
+        and TTFT/TPOT targets ride the spec into the scheduling policies
+        and the request tracker.
+
+        The legacy positional form ``submit(req_id, prompt,
+        max_new_tokens, deadline_s=...)`` survives as a deprecated shim.
+        """
+        if not isinstance(req, RequestSpec):
+            warnings.warn(
+                "Engine.submit(req_id, prompt, max_new_tokens, ...) is "
+                "deprecated; pass a serving.Request spec",
+                DeprecationWarning, stacklevel=2)
+            req = RequestSpec(req, prompt, max_new_tokens,
+                              deadline_s=deadline_s)
+        spec = req
+        req_id = spec.req_id
+        prompt = np.asarray(spec.prompt, np.int32)
+        self.prompts[req_id] = prompt
         self.outputs[req_id] = []
-        self.submit_t[req_id] = time.perf_counter()
-        self.tel.on_submit(req_id, len(prompt), max_new_tokens,
-                           self.submit_t[req_id])
-        req = Request(req_id, len(prompt), max_new_tokens)
+        now = self.submit_t[req_id] = self.clock()
+        self.tel.on_submit(req_id, len(prompt), spec.max_new_tokens, now,
+                           spec=spec)
+        sreq = Request(req_id, len(prompt), spec.max_new_tokens,
+                       priority=spec.priority, submit_t=now, spec=spec)
         E = self.ecfg
         if E.max_queue and len(self.batcher.queue) >= E.max_queue:
             self.aborted[req_id] = "shed"
             self.abort_counts["shed"] += 1
-            self.tel.on_abort(req, -1, "shed")
+            self.tel.on_abort(sreq, -1, "shed")
             return False
-        dl = E.default_deadline_s if deadline_s is None else deadline_s
+        dl = E.default_deadline_s if spec.deadline_s is None \
+            else spec.deadline_s
         if dl and dl > 0:
-            self.deadline_t[req_id] = self.submit_t[req_id] + dl
+            self.deadline_t[req_id] = now + dl
         if self.prefiller.name == "chunked":
-            req.chunked_prefill = True
-            req.prefill_done = False
-        self.batcher.submit(req)
+            sreq.chunked_prefill = True
+            sreq.prefill_done = False
+        self.batcher.submit(sreq)
         return True
 
     def abort(self, req_id: int, reason: str = "client") -> bool:
@@ -564,7 +598,7 @@ class DecodeEngine:
         if emit:
             self.tokens[slot] = tok
             self.outputs[req.req_id].append(int(tok))
-            self.first_tok_t.setdefault(req.req_id, time.perf_counter())
+            self.first_tok_t.setdefault(req.req_id, self.clock())
             if self.tel.enabled:
                 self.tel.on_tokens(req.req_id, 1,
                                    self.first_tok_t[req.req_id])
@@ -859,7 +893,7 @@ class DecodeEngine:
                     self._abort_req.setdefault(r.req_id, "chaos")
             self._process_row_death(finished)
         if self.deadline_t:
-            now = time.perf_counter()
+            now = self.clock()
             for rid, t in list(self.deadline_t.items()):
                 s, req = self._find_request(rid)
                 if req is None or (s is not None and finished is not None
@@ -1001,7 +1035,7 @@ class DecodeEngine:
                 self.outputs[self.batcher.slots[s].req_id].append(int(nxt[s]))
             self.timing.decode_tokens += len(emitted)
             if self.tel.enabled:
-                tnow = time.perf_counter()
+                tnow = self.clock()
                 for s in emitted:
                     self.tel.on_tokens(self.batcher.slots[s].req_id, 1, tnow)
                 self.tel.on_horizon(float(ctx[emitted].sum()))
@@ -1192,10 +1226,10 @@ class DecodeEngine:
             self.tel.trace.span("device", "horizon", meta[2], meta[0],
                                 time.perf_counter(),
                                 args={"slots": len(pairs)})
-        # one readback wall-clock for the whole horizon: every emission in
+        # one readback timestamp for the whole horizon: every emission in
         # it became host-visible at the same sync, and the per-request
         # records must reproduce the first_tok_t-based TTFT exactly
-        tnow = time.perf_counter()
+        tnow = self.clock()
         tok_ctx = 0.0
         finished = np.zeros((self.ecfg.n_slots,), bool)
         for slot, req in pairs:
@@ -1411,10 +1445,17 @@ class DecodeEngine:
         way. Returns the constructed Request (already queued)."""
         self.prompts[req_id] = np.asarray(prompt, np.int32)
         self.outputs[req_id] = [int(t) for t in out]
-        self.submit_t[req_id] = time.perf_counter()
+        now = self.submit_t[req_id] = self.clock()
+        # re-synthesize a minimal spec so policies/tracker see the adopted
+        # request's tier (SLO latency targets don't survive a handoff —
+        # the timestamps restart in the adopting engine's clock frame)
+        spec = RequestSpec(req_id, self.prompts[req_id],
+                           int(ent["max_new"]),
+                           priority=int(ent.get("priority", 0)))
         self.tel.on_submit(req_id, len(self.prompts[req_id]),
-                           int(ent["max_new"]), self.submit_t[req_id])
-        req = Request(req_id, int(ent["prompt_len"]), int(ent["max_new"]))
+                           int(ent["max_new"]), now, spec=spec)
+        req = Request(req_id, int(ent["prompt_len"]), int(ent["max_new"]),
+                      priority=spec.priority, submit_t=now, spec=spec)
         if self.prefiller.name == "chunked":
             req.chunked_prefill = True
             req.prefill_done = False
@@ -1476,6 +1517,8 @@ class DecodeEngine:
                 arrs["kv_k"], arrs["kv_v"] = snap["kv"]
             if "rows" in snap:
                 arrs["rows"] = snap["rows"]
+        if req.priority:
+            ent["priority"] = int(req.priority)
         return ent, arrs
 
     def save_snapshot(self, ckpt_dir=None):
@@ -1591,7 +1634,7 @@ class DecodeEngine:
             if ent["state"] == "done":         # finished during quiesce:
                 self.prompts[rid] = prompt     # republish, don't re-run
                 self.outputs[rid] = out
-                self.submit_t[rid] = time.perf_counter()
+                self.submit_t[rid] = self.clock()
                 continue
             kv = (a["kv_k"], a["kv_v"]) if "kv_k" in a else None
             rows = (self._rows_from_nested(a["rows"])

@@ -75,6 +75,9 @@ class Telemetry:
         construction; everything here is a pull binding — no hot-path cost,
         no device access."""
         engine.batcher.events = self.tracker
+        # record timestamps must live in the engine's clock frame (virtual
+        # clocks included), not the wall clock the tracker defaults to
+        self.tracker.clock = engine.clock
         r = self.registry
         t = engine.timing
         r.bind("engine_steps_total", lambda: t.steps,
@@ -96,6 +99,10 @@ class Telemetry:
                "requests admitted to slots", kind="counter")
         r.bind("sched_preempted_total", lambda: s.preempted,
                "requests preempted (pool exhausted)", kind="counter")
+        r.bind("sched_priority_preempted_total",
+               lambda: s.priority_preempted,
+               "policy-driven preemptions for starved higher-priority "
+               "requests (subset of sched_preempted_total)", kind="counter")
         r.bind("sched_completed_total", lambda: s.completed,
                "requests completed (EOS / budget)", kind="counter")
         r.bind("sched_dedup_deferred_total", lambda: s.dedup_deferred,
@@ -160,8 +167,8 @@ class Telemetry:
 
     # ---- engine-driven events (cheap host arithmetic only) ------------
     def on_submit(self, req_id: int, prompt_len: int, max_new: int,
-                  t: float | None = None) -> None:
-        self.tracker.on_submit(req_id, prompt_len, max_new, t)
+                  t: float | None = None, spec=None) -> None:
+        self.tracker.on_submit(req_id, prompt_len, max_new, t, spec=spec)
 
     def on_tokens(self, req_id: int, n: int, t: float) -> None:
         self.tracker.on_tokens(req_id, n, t)
@@ -227,7 +234,8 @@ class _NullTelemetry:
     def attach_engine(self, engine) -> None:
         pass
 
-    def on_submit(self, req_id, prompt_len, max_new, t=None) -> None:
+    def on_submit(self, req_id, prompt_len, max_new, t=None,
+                  spec=None) -> None:
         pass
 
     def on_tokens(self, req_id, n, t) -> None:

@@ -43,6 +43,13 @@ class RequestRecord:
     # abort / deadline / NaN quarantine / load shed); reason in abort_reason
     aborted: bool = False
     abort_reason: str | None = None
+    # SLO identity, copied from the submission spec (serving.Request):
+    # targets are what the client asked for; tenant/priority identify the
+    # traffic class in per-tier goodput breakdowns
+    priority: int = 0
+    tenant: str | None = None
+    ttft_slo_s: float | None = None
+    tpot_slo_s: float | None = None
 
     # ---- derived latencies (seconds) ----------------------------------
     @property
@@ -63,6 +70,22 @@ class RequestRecord:
         return (self.last_token_t - self.first_token_t) / (self.tokens - 1)
 
     @property
+    def slo_ok(self) -> bool:
+        """SLO attainment: the request finished AND met every target it
+        declared (unset targets are vacuously met; a request too short to
+        have a TPOT is judged on TTFT alone). Aborted/shed requests never
+        attain — goodput counts work the client actually got in time."""
+        if not self.finished:
+            return False
+        if self.ttft_slo_s is not None and (
+                self.ttft_s is None or self.ttft_s > self.ttft_slo_s):
+            return False
+        if self.tpot_slo_s is not None and self.tpot_s is not None \
+                and self.tpot_s > self.tpot_slo_s:
+            return False
+        return True
+
+    @property
     def accept_len_mean(self) -> float | None:
         rounds = getattr(self, "_spec_rounds", 0)
         if not rounds:
@@ -74,6 +97,7 @@ class RequestRecord:
         d["queue_s"] = self.queue_s
         d["ttft_s"] = self.ttft_s
         d["tpot_s"] = self.tpot_s
+        d["slo_ok"] = self.slo_ok
         d["spec_rounds"] = getattr(self, "_spec_rounds", 0)
         return d
 
@@ -90,10 +114,15 @@ def percentile(vals: list[float], q: float) -> float:
 class RequestTracker:
     """Folds engine/scheduler events into per-request records."""
 
-    def __init__(self, registry=None, trace=None, log_path: str | None = None):
+    def __init__(self, registry=None, trace=None, log_path: str | None = None,
+                 clock=None):
         self.live: dict[int, RequestRecord] = {}
         self.records: list[RequestRecord] = []
         self.trace = trace
+        # injectable time source (the telemetry facade rebinds this to the
+        # engine's clock at attach, so record timestamps live in the same
+        # frame as the engine's deadlines — virtual or wall)
+        self.clock = clock or time.perf_counter
         self._log = open(log_path, "w") if log_path else None
         r = registry
         if r is not None and r.enabled:
@@ -111,19 +140,31 @@ class RequestTracker:
                 "natural finish (abort / deadline / quarantine / shed)")
             self.c_tokens = r.counter(
                 "request_tokens_total", "tokens emitted across all requests")
+            self.c_slo = r.counter(
+                "requests_slo_attained_total", "finished requests that met "
+                "every SLO target they declared")
             r.bind("requests_live", lambda: len(self.live),
                    "submitted requests not yet finished")
+            r.bind("goodput", lambda: self.goodput(),
+                   "fraction of closed requests that finished within their "
+                   "SLO targets")
         else:
             from repro.telemetry.registry import _NULL
             self.h_ttft = self.h_tpot = self.h_queue = _NULL
             self.c_finished = self.c_tokens = self.c_aborted = _NULL
+            self.c_slo = _NULL
 
     # ---- engine-side events -------------------------------------------
     def on_submit(self, req_id: int, prompt_len: int, max_new: int,
-                  t: float | None = None) -> None:
-        self.live[req_id] = RequestRecord(
+                  t: float | None = None, spec=None) -> None:
+        rec = self.live[req_id] = RequestRecord(
             req_id, prompt_len, max_new,
-            submit_t=time.perf_counter() if t is None else t)
+            submit_t=self.clock() if t is None else t)
+        if spec is not None:
+            rec.priority = getattr(spec, "priority", 0)
+            rec.tenant = getattr(spec, "tenant", None)
+            rec.ttft_slo_s = getattr(spec, "ttft_slo_s", None)
+            rec.tpot_slo_s = getattr(spec, "tpot_slo_s", None)
 
     def on_first_token(self, req_id: int, t: float) -> None:
         rec = self.live.get(req_id)
@@ -153,7 +194,7 @@ class RequestTracker:
         rec = self.live.get(req.req_id)
         if rec is None:
             return
-        t = time.perf_counter()
+        t = self.clock()
         if rec.admit_t is None:
             rec.admit_t = t
         else:
@@ -164,7 +205,7 @@ class RequestTracker:
         rec = self.live.get(req.req_id)
         if rec is None:
             return
-        t = time.perf_counter()
+        t = self.clock()
         rec.preemptions += 1
         rec.preempt_ts.append(t)
         if self.trace is not None:
@@ -179,7 +220,7 @@ class RequestTracker:
         rec = self.live.pop(req.req_id, None)
         if rec is None:
             return
-        t = time.perf_counter()
+        t = self.clock()
         rec.aborted = True
         rec.abort_reason = reason
         rec.finish_t = t
@@ -196,9 +237,11 @@ class RequestTracker:
         if rec is None:
             return
         rec.finished = True
-        rec.finish_t = rec.last_token_t or time.perf_counter()
+        rec.finish_t = rec.last_token_t or self.clock()
         self.records.append(rec)
         self.c_finished.inc()
+        if rec.slo_ok:
+            self.c_slo.inc()
         if rec.ttft_s is not None:
             self.h_ttft.observe(rec.ttft_s)
         if rec.tpot_s is not None:
@@ -222,6 +265,16 @@ class RequestTracker:
             self._log.flush()
 
     # -------------------------------------------------------------------
+    def goodput(self) -> float:
+        """SLO attainment over closed (finished + aborted) records: the
+        fraction that finished within every target they declared. Aborted
+        and shed requests count against goodput — work the client never
+        got, or got too late, is not good throughput. 0.0 before any
+        request closes."""
+        if not self.records:
+            return 0.0
+        return sum(1 for r in self.records if r.slo_ok) / len(self.records)
+
     def summary(self) -> dict:
         """Percentile summary over finished records (seconds -> ms).
         Aborted records are counted but excluded from the latency
@@ -235,7 +288,9 @@ class RequestTracker:
         out = {"finished": len(recs),
                "aborted": sum(1 for r in self.records if r.aborted),
                "preemptions": sum(r.preemptions for r in recs),
-               "tokens": sum(r.tokens for r in recs)}
+               "tokens": sum(r.tokens for r in recs),
+               "slo_attained": sum(1 for r in self.records if r.slo_ok),
+               "goodput": self.goodput()}
         for name, vals in (("ttft", ttft), ("tpot", tpot), ("queue", queue)):
             if not vals:
                 continue

@@ -21,6 +21,7 @@ from repro.models import model as MDL
 from repro.runtime.faults import FaultConfig
 from repro.serving import (ClusterConfig, DecodeEngine, EngineCluster,
                            EngineConfig)
+from repro.serving import Request as Req
 
 PAGE = 4
 _PARAMS: dict = {}
@@ -52,7 +53,7 @@ def _ref(prompts, max_new=5, arch="llama3.2-1b", **ekw):
     cfg, params = _params(arch)
     eng = DecodeEngine(cfg, _ecfg(**ekw), params)
     for r, p in enumerate(prompts):
-        eng.submit(r, p, max_new)
+        eng.submit(Req(r, p, max_new))
     return {k: list(v) for k, v in eng.run(2000).items()}
 
 
@@ -63,7 +64,7 @@ def _cluster(ccfg=None, arch="llama3.2-1b", **ekw):
 
 def _run(cl, prompts, max_new=5):
     for r, p in enumerate(prompts):
-        cl.submit(r, p, max_new)
+        cl.submit(Req(r, p, max_new))
     return {k: list(v) for k, v in cl.run(2000).items()}
 
 
@@ -200,7 +201,7 @@ def test_handoff_timeout_redispatches_to_healthy_engine():
     cl = _cluster(ClusterConfig(n_prefill=1, n_decode=2, transfer_ticks=3,
                                 handoff_timeout=2))
     for r, p in enumerate(prompts):
-        cl.submit(r, p, 5)
+        cl.submit(Req(r, p, 5))
     # run until transfers are pending, then kill their destination directly
     while not cl._pending:
         cl.tick()
@@ -275,7 +276,7 @@ def test_all_engines_dead_goes_terminal():
 def test_backpressure_sheds_at_router():
     prompts = _prompts(12)
     cl = _cluster(ClusterConfig(max_backlog=4))
-    accepted = [cl.submit(r, p, 4) for r, p in enumerate(prompts)]
+    accepted = [cl.submit(Req(r, p, 4)) for r, p in enumerate(prompts)]
     outs = {k: list(v) for k, v in cl.run(2000).items()}
     n_ok = sum(accepted)
     assert 0 < n_ok < 12                        # some flowed, some shed

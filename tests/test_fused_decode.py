@@ -13,6 +13,7 @@ from repro.core.allocator import PageAllocator
 from repro.core.scheduler import ContinuousBatcher, Request
 from repro.models import model as MDL
 from repro.serving import DecodeEngine, EngineConfig, make_scan_sampler
+from repro.serving import Request as Req
 
 PAGE = 4
 _SHARED = {}
@@ -47,7 +48,7 @@ def _run(K, mode="batched", *, n_pages=96, cache=False, eos=-1,
         p = rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 20)))
         if shared:
             p = np.concatenate([sys_prompt, p[:4]]).astype(np.int32)
-        eng.submit(r, p, budgets[r % len(budgets)])
+        eng.submit(Req(r, p, budgets[r % len(budgets)]))
     outs = eng.run(3000)
     return {k: list(v) for k, v in outs.items()}, eng
 
@@ -180,9 +181,9 @@ def test_legacy_sampler_callable_rides_the_fused_path():
         eng = DecodeEngine(cfg, ecfg, params, sample=sample)
         rng = np.random.default_rng(3)
         for r in range(6):
-            eng.submit(r, rng.integers(0, cfg.vocab_size,
+            eng.submit(Req(r, rng.integers(0, cfg.vocab_size,
                                        size=int(rng.integers(3, 20))),
-                       BUDGETS[r])
+                       BUDGETS[r]))
         eng.run(3000)
         return eng
 
@@ -213,9 +214,9 @@ def test_legacy_sampler_callable_rides_the_fused_path():
     eng = DecodeEngine(cfg, ecfg, params, sample=make_stateful())
     rng = np.random.default_rng(3)
     for r in range(6):
-        eng.submit(r, rng.integers(0, cfg.vocab_size,
+        eng.submit(Req(r, rng.integers(0, cfg.vocab_size,
                                    size=int(rng.integers(3, 20))),
-                   BUDGETS[r])
+                   BUDGETS[r]))
     fin = None
     for _ in range(3000):
         if eng.batcher.done():
@@ -238,8 +239,8 @@ def test_mixed_step_and_run_apis_stay_identical():
         ecfg = EngineConfig(n_slots=2, page_size=64, n_pages=8,
                             max_context=128, eos_token=-1, decode_horizon=4)
         eng = DecodeEngine(cfg, ecfg, params)
-        eng.submit(0, [3, 5, 7, 9], 12)
-        eng.submit(1, [2, 4, 6], 12)
+        eng.submit(Req(0, [3, 5, 7, 9], 12))
+        eng.submit(Req(1, [2, 4, 6], 12))
         return eng
 
     pure = make()

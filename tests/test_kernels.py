@@ -13,6 +13,7 @@ from repro.kernels.backend import KernelConfig, default_interpret
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssm_scan import ssm_chunk_scan
+from repro.serving import Request as Req
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -357,8 +358,8 @@ def _serve(cfg, params, **ecfg_kw):
     eng = DecodeEngine(cfg, EngineConfig(**kw), params)
     rng = np.random.default_rng(3)
     for r in range(3):
-        eng.submit(r, rng.integers(0, cfg.vocab_size,
-                                   size=int(rng.integers(4, 14))), 4)
+        eng.submit(Req(r, rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(4, 14))), 4))
     outs = eng.run(300)
     assert eng.batcher.stats.completed == 3
     return {k: list(v) for k, v in outs.items()}

@@ -12,6 +12,7 @@ except ImportError:              # graceful fallback: example-based driver
 
 from repro.core.allocator import PageAllocator
 from repro.kvcache import PrefixCache, RadixTree
+from repro.serving import Request as Req
 
 PAGE = 4
 
@@ -222,7 +223,7 @@ def _engine_outputs(cfg, params, *, cache, host=0, n_pages=96, mode="batched",
     system = np.arange(2000, 2038, dtype=np.int32)     # 38-token sys prompt
     for r in range(n_req):
         sfx = rng.integers(0, cfg.vocab_size, size=int(rng.integers(2, 8)))
-        eng.submit(r, np.concatenate([system, sfx]).astype(np.int32), budget)
+        eng.submit(Req(r, np.concatenate([system, sfx]).astype(np.int32), budget))
     outs = eng.run(1500)
     assert eng.batcher.stats.completed == n_req
     return {k: list(v) for k, v in outs.items()}, eng
@@ -302,11 +303,11 @@ def test_shared_pages_and_admitted_kv_beyond_pool():
                             prefix_cache=cache, host_pages=64)
         eng = DecodeEngine(cfg, ecfg, params)
         rng = np.random.default_rng(2)
-        eng.submit(0, system, 2)                       # warm the prefix
+        eng.submit(Req(0, system, 2))                       # warm the prefix
         eng.run(100)
         for r in range(1, 7):
             sfx = rng.integers(0, cfg.vocab_size, size=3)
-            eng.submit(r, np.concatenate([system, sfx]).astype(np.int32), 6)
+            eng.submit(Req(r, np.concatenate([system, sfx]).astype(np.int32), 6))
         peak_pages = peak_kv = 0
         finished = None
         for _ in range(400):

@@ -14,6 +14,7 @@ from repro.configs import get_config, reduced
 from repro.models import model as MDL
 from repro.models import ssm as SSM
 from repro.serving import DecodeEngine, EngineConfig
+from repro.serving import Request as Req
 
 PAGE = 4
 _SHARED = {}
@@ -43,8 +44,8 @@ def _run(name, mode, *, chunk=5, horizon=1, n_pages=96, nreq=4, budget=5,
     if submit is None:
         rng = np.random.default_rng(0)
         for r in range(nreq):
-            eng.submit(r, rng.integers(0, cfg.vocab_size,
-                                       size=int(rng.integers(3, 18))), budget)
+            eng.submit(Req(r, rng.integers(0, cfg.vocab_size,
+                                       size=int(rng.integers(3, 18))), budget))
     else:
         submit(eng)
     outs = eng.run(3000)
@@ -134,8 +135,8 @@ def test_chunked_prefill_interleaves_with_recurrent_decode():
     decoding — and its trajectory is untouched by the mid-prefill rows
     (the decode run-mask guards their carry)."""
     def submit(eng):
-        eng.submit(0, [3, 5, 7], 10)            # short: decodes early
-        eng.submit(1, list(range(1, 20)), 4)    # long: several chunk ticks
+        eng.submit(Req(0, [3, 5, 7], 10))            # short: decodes early
+        eng.submit(Req(1, list(range(1, 20)), 4))    # long: several chunk ticks
 
     got_c, eng_c = _run("xlstm-350m", "chunked", chunk=4, submit=submit)
     got_s, _ = _run("xlstm-350m", "slot", submit=submit)
@@ -190,7 +191,7 @@ def test_finish_line_preemption_with_no_emitted_token_recomputes():
                             prefill_mode="chunked", prefill_chunk=4)
         eng = DecodeEngine(cfg, ecfg, params)
         for r in range(4):
-            eng.submit(r, np.arange(1 + r, 13 + r, dtype=np.int32), 5)
+            eng.submit(Req(r, np.arange(1 + r, 13 + r, dtype=np.int32), 5))
         outs = eng.run(3000)
         return {k: list(v) for k, v in outs.items()}, eng
 
@@ -231,7 +232,7 @@ def test_recurrent_rows_reset_on_slot_refill():
                             prefill_mode="batched", decode_horizon=4)
         eng = DecodeEngine(cfg, ecfg, params)
         for r, p in enumerate(prompts):
-            eng.submit(r, p, 6)
+            eng.submit(Req(r, p, 6))
         eng.run(2000)
         return eng
 

@@ -28,6 +28,7 @@ from repro.models import model as MDL
 from repro.runtime.faults import (NULL_FAULTS, FaultConfig, FaultInjector,
                                   make_faults)
 from repro.serving import DecodeEngine, EngineConfig
+from repro.serving import Request as Req
 
 PAGE = 4
 
@@ -68,8 +69,8 @@ def _submit(eng, n, max_new=5, seed=0):
     cfg, _ = _params()
     rng = np.random.default_rng(seed)
     for r in range(n):
-        eng.submit(r, rng.integers(0, cfg.vocab_size,
-                                   size=int(rng.integers(3, 20))), max_new)
+        eng.submit(Req(r, rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(3, 20))), max_new))
 
 
 def _assert_leak_free(eng):
@@ -139,7 +140,7 @@ def test_zero_probability_faults_are_identity():
 def test_abort_and_deadline_all_prefill_modes(mode):
     eng = _engine(prefill_mode=mode, prefill_chunk=5)
     _submit(eng, 6, max_new=20)
-    eng.submit(9, np.arange(1, 10), 20, deadline_s=1e-6)   # expires at once
+    eng.submit(Req(9, np.arange(1, 10), 20, deadline_s=1e-6))   # expires at once
     for _ in range(2):
         eng.tick()
     assert eng.abort(0)                         # running or queued: live
@@ -173,7 +174,7 @@ def test_load_shed_bounded_queue():
     eng = _engine(max_queue=2)
     cfg, _ = _params()
     rng = np.random.default_rng(0)
-    oks = [eng.submit(r, rng.integers(0, cfg.vocab_size, size=5), 3)
+    oks = [eng.submit(Req(r, rng.integers(0, cfg.vocab_size, size=5), 3))
            for r in range(8)]
     assert sum(oks) == 2                        # admission happens at tick
     assert eng.abort_counts["shed"] == 6
@@ -274,8 +275,8 @@ def test_swap_failure_drops_host_tier():
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, size=12)
     for r in range(8):
-        eng.submit(r, np.concatenate(
-            [shared, rng.integers(0, cfg.vocab_size, size=5)]), 6)
+        eng.submit(Req(r, np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, size=5)]), 6))
     eng.run(2000)
     assert eng.batcher.stats.completed + len(eng.aborted) == 8
     if eng.degraded_mode & 4:
@@ -319,11 +320,11 @@ def test_snapshot_restore_recurrent_carries(tmp_path):
                             size=int(rng.integers(4, 16))) for _ in range(4)]
     clean = eng_for()
     for r, p in enumerate(prompts):
-        clean.submit(r, p, 8)
+        clean.submit(Req(r, p, 8))
     ref = {k: list(v) for k, v in clean.run(500).items()}
     eng = eng_for(snapshot_dir=str(tmp_path), snapshot_every=4)
     for r, p in enumerate(prompts):
-        eng.submit(r, p, 8)
+        eng.submit(Req(r, p, 8))
     for _ in range(5):
         eng.tick()
     eng2 = eng_for(snapshot_dir=str(tmp_path))
@@ -448,8 +449,8 @@ def test_swap_retry_backoff_before_degradation():
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, size=12)
     for r in range(8):
-        eng.submit(r, np.concatenate(
-            [shared, rng.integers(0, cfg.vocab_size, size=5)]), 6)
+        eng.submit(Req(r, np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, size=5)]), 6))
     eng.run(2000)
     assert eng.batcher.stats.completed + len(eng.aborted) == 8
     sd = eng.cache.stats_dict()

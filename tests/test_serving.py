@@ -13,6 +13,7 @@ from repro.core.scheduler import ContinuousBatcher, Request
 from repro.models import model as MDL
 from repro.serving import (DecodeEngine, EngineConfig, FCFSPolicy,
                            MemoryAwarePolicy, SJFPolicy, make_sampler)
+from repro.serving import Request as Req
 
 PAGE = 4
 
@@ -31,8 +32,8 @@ def _run_engine(cfg, params, mode, *, chunk=5):
     eng = DecodeEngine(cfg, ecfg, params)
     rng = np.random.default_rng(0)
     for r in range(6):
-        eng.submit(r, rng.integers(0, cfg.vocab_size,
-                                   size=int(rng.integers(3, 20))), 5)
+        eng.submit(Req(r, rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(3, 20))), 5))
     outs = eng.run(500)
     assert eng.batcher.stats.completed == 6
     assert eng.alloc.pages_in_use == 0
@@ -63,8 +64,8 @@ def test_chunked_prefill_interleaves_with_decode():
                             max_context=64, eos_token=-1, prefill_mode=mode,
                             prefill_chunk=4)
         eng = DecodeEngine(cfg, ecfg, params)
-        eng.submit(0, [3, 5, 7], 10)            # short: decodes early
-        eng.submit(1, list(range(1, 20)), 4)    # long: 5 chunk ticks
+        eng.submit(Req(0, [3, 5, 7], 10))            # short: decodes early
+        eng.submit(Req(1, list(range(1, 20)), 4))    # long: 5 chunk ticks
         return eng, eng.run(300)
 
     eng_c, outs_c = run("chunked")
@@ -91,7 +92,7 @@ def test_preemption_resume_is_token_identical():
         eng = DecodeEngine(cfg, ecfg, params)
         rng = np.random.default_rng(3)
         for r in range(2):
-            eng.submit(r, rng.integers(0, cfg.vocab_size, size=9), 12)
+            eng.submit(Req(r, rng.integers(0, cfg.vocab_size, size=9), 12))
         outs = eng.run(2000)
         return {k: list(v) for k, v in outs.items()}, eng
 
@@ -113,7 +114,7 @@ def test_recurrent_family_gets_requested_prefill_mode():
     eng = DecodeEngine(cfg, ecfg)
     assert eng.prefiller.name == "chunked"
     for r in range(2):
-        eng.submit(r, [2, 4, 6], 3)
+        eng.submit(Req(r, [2, 4, 6], 3))
     outs = eng.run(200)
     assert eng.batcher.stats.completed == 2
     assert all(len(v) >= 3 for v in outs.values())
@@ -266,7 +267,7 @@ def test_engine_timing_reports_host_and_device_split():
     ecfg = EngineConfig(n_slots=2, page_size=PAGE, n_pages=32, max_context=24,
                         eos_token=-1)
     eng = DecodeEngine(cfg, ecfg)
-    eng.submit(0, [1, 2, 3], 3)
+    eng.submit(Req(0, [1, 2, 3], 3))
     eng.run(100)
     tm = eng.timing.as_dict()
     assert tm["steps"] > 0

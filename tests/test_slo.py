@@ -1,0 +1,292 @@
+"""SLO serving layer: Request/policy API, virtual time, priority
+preemption token-identity, EDF ordering, goodput, and the workload
+generator's determinism contract."""
+import os
+import sys
+from dataclasses import replace
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.allocator import PageAllocator
+from repro.core.scheduler import ContinuousBatcher
+from repro.core.scheduler import Request as SchedReq
+from repro.models import model as MDL
+from repro.runtime.clock import VirtualClock
+from repro.serving import (DecodeEngine, EDFPolicy, EngineConfig, Request,
+                           SLOPolicy, available_policies)
+from repro.serving.policies import SJFPolicy, make_policy
+from repro.telemetry.tracing import RequestTracker
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import workload  # noqa: E402
+
+PAGE = 4
+
+
+def tiny(name="llama3.2-1b", **kw):
+    return replace(reduced(get_config(name)), dtype="float32", **kw)
+
+
+_PARAMS = {}
+
+
+def params_for(cfg):
+    if "p" not in _PARAMS:
+        _PARAMS["p"] = MDL.init_params(cfg, jax.random.PRNGKey(0),
+                                       jnp.float32)
+    return _PARAMS["p"]
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock():
+    vc = VirtualClock()
+    assert vc() == 0.0
+    vc.advance(0.25)
+    assert vc() == 0.25
+    vc.advance_to(1.0)
+    assert vc() == 1.0
+    vc.advance_to(0.5)          # never goes backwards
+    assert vc() == 1.0
+    with pytest.raises(AssertionError):
+        vc.advance(-0.1)
+
+
+# ---------------------------------------------------------------------------
+# workload generator determinism
+# ---------------------------------------------------------------------------
+
+def test_workload_trace_deterministic():
+    cfg = workload.default_slo_config()
+    t1, t2 = workload.generate(cfg), workload.generate(cfg)
+    assert t1 == t2
+    cfg2 = workload.default_slo_config()
+    cfg2.seed = cfg.seed + 1
+    assert workload.generate(cfg2)["events"] != t1["events"]
+    ts = [e["t"] for e in t1["events"]]
+    assert ts == sorted(ts)
+
+
+def test_workload_prompt_tokens_share_group_prefix():
+    trace = workload.generate(workload.default_slo_config())
+    subs = [e for e in trace["events"] if e["kind"] == "submit"]
+    by_group = {}
+    for e in subs:
+        if e["prefix_group"] >= 0 and e["prefix_len"] > 0:
+            by_group.setdefault((e["tenant"], e["prefix_group"]),
+                                []).append(e)
+    pair = next(v for v in by_group.values() if len(v) >= 2)
+    a = workload.prompt_tokens(trace, pair[0], vocab=128)
+    b = workload.prompt_tokens(trace, pair[1], vocab=128)
+    k = min(pair[0]["prefix_len"], pair[1]["prefix_len"])
+    assert k > 0 and list(a[:k]) == list(b[:k])    # shared prefix
+    # materialization itself is deterministic
+    assert list(a) == list(workload.prompt_tokens(trace, pair[0], vocab=128))
+    assert a.min() >= 1                            # never the eos id 0
+
+
+def test_workload_committed_trace_matches_generator():
+    """The checked-in trace is exactly what the committed config
+    regenerates — nobody hand-edited it."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "traces", "slo_default.json")
+    committed = workload.load_trace(path)
+    assert committed["events"] == \
+        workload.generate(workload.default_slo_config())["events"]
+
+
+# ---------------------------------------------------------------------------
+# policy registry + EDF / SLO ordering (scheduler-level, no model)
+# ---------------------------------------------------------------------------
+
+def _batcher(policy, entries):
+    """entries: (req_id, prompt_len, max_new, submit_t, spec)."""
+    b = ContinuousBatcher(PageAllocator(64, 1, PAGE), 1, max_context=256,
+                          policy=policy)
+    for rid, plen, mnew, st, spec in entries:
+        b.submit(SchedReq(rid, plen, mnew, submit_t=st, spec=spec,
+                          priority=getattr(spec, "priority", 0)))
+    return b
+
+
+def test_policy_registry():
+    assert {"fcfs", "sjf", "edf", "slo", "memory_aware"} <= \
+        set(available_policies())
+    p = make_policy(SJFPolicy.Config(by="prompt"))
+    assert isinstance(p, SJFPolicy) and p.by == "prompt"
+    with pytest.raises(KeyError, match="edf"):
+        make_policy("nope")
+    with pytest.raises(TypeError):
+        SJFPolicy(SJFPolicy.Config(), by="prompt")
+
+
+def test_edf_ordering_property():
+    """EDF admits the earliest effective deadline (hard deadline or TTFT
+    target, whichever is sooner); deadline-free requests sort last; ties
+    break FCFS — checked against an independent key on random queues."""
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        entries = []
+        for rid in range(8):
+            st = float(rng.uniform(0, 1))
+            dl = float(rng.uniform(0.1, 2)) if rng.random() < 0.5 else None
+            tt = float(rng.uniform(0.05, 1)) if rng.random() < 0.5 else None
+            entries.append((rid, int(rng.integers(1, 8)), 4, st,
+                            Request(rid, [1], 4, deadline_s=dl,
+                                    ttft_slo_s=tt)))
+        b = _batcher(EDFPolicy(), entries)
+        expected = min(
+            range(len(entries)),
+            key=lambda i: (min(entries[i][3] + (entries[i][4].deadline_s
+                                                or np.inf),
+                               entries[i][3] + (entries[i][4].ttft_slo_s
+                                                or np.inf)),
+                           entries[i][3], i))
+        assert b.policy.select(b) == expected
+
+
+def test_slo_priority_beats_deadline():
+    """Tier first: a high-priority request with a LATER deadline is still
+    admitted ahead of an urgent low-priority one; within a tier, EDF."""
+    lo = Request(0, [1], 4, priority=0, ttft_slo_s=0.01)
+    hi = Request(1, [1], 4, priority=2, ttft_slo_s=5.0)
+    b = _batcher(SLOPolicy(), [(0, 4, 4, 0.0, lo), (1, 4, 4, 0.0, hi)])
+    assert b.policy.select(b) == 1
+    a = Request(2, [1], 4, priority=1, ttft_slo_s=0.5)
+    c = Request(3, [1], 4, priority=1, ttft_slo_s=0.1)
+    b2 = _batcher(SLOPolicy(), [(2, 4, 4, 0.0, a), (3, 4, 4, 0.0, c)])
+    assert b2.policy.select(b2) == 1
+
+
+# ---------------------------------------------------------------------------
+# goodput against a hand-checked timeline
+# ---------------------------------------------------------------------------
+
+def test_goodput_hand_checked():
+    vc = VirtualClock()
+    tr = RequestTracker(clock=vc)
+
+    def close(rid, *, finish=True):
+        tr.on_finish(SimpleNamespace(req_id=rid, cached_len=0), 0) if finish \
+            else tr.on_abort(SimpleNamespace(req_id=rid), 0, "client")
+
+    # A: meets both targets (ttft 0.05 <= 0.1, tpot 0.025 <= 0.05)
+    tr.on_submit(0, 4, 5, spec=Request(0, [1], 5, ttft_slo_s=0.1,
+                                       tpot_slo_s=0.05))
+    vc.advance(0.05)
+    tr.on_tokens(0, 1, vc())
+    vc.advance(0.1)
+    tr.on_tokens(0, 4, vc())
+    close(0)
+    assert tr.records[-1].slo_ok
+    # B: misses TTFT (0.2 > 0.05)
+    tr.on_submit(1, 4, 2, spec=Request(1, [1], 2, ttft_slo_s=0.05))
+    vc.advance(0.2)
+    tr.on_tokens(1, 2, vc())
+    close(1)
+    assert not tr.records[-1].slo_ok
+    # C: no targets -> vacuously attained on finish
+    tr.on_submit(2, 4, 1, spec=Request(2, [1], 1))
+    tr.on_tokens(2, 1, vc())
+    close(2)
+    # D: aborted -> never attains, but counts against goodput
+    tr.on_submit(3, 4, 8, spec=Request(3, [1], 8, ttft_slo_s=9.0))
+    close(3, finish=False)
+    assert tr.goodput() == pytest.approx(2 / 4)
+    s = tr.summary()
+    assert s["slo_attained"] == 2 and s["goodput"] == pytest.approx(0.5)
+    assert s["finished"] == 3 and s["aborted"] == 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level: priority preemption, deadlines, shim — all on virtual time
+# ---------------------------------------------------------------------------
+
+def _tick_until_done(eng, vc, dt=0.01, limit=500):
+    for _ in range(limit):
+        if eng.batcher.done() and eng._inflight is None:
+            return
+        eng.tick()
+        vc.advance(dt)
+    raise AssertionError("engine did not drain")
+
+
+def _mk_engine(cfg, vc, *, n_slots, policy):
+    ecfg = EngineConfig(n_slots=n_slots, page_size=PAGE, n_pages=96,
+                        max_context=64, eos_token=-1, prefill_mode="batched",
+                        sched_policy=policy, clock=vc)
+    return DecodeEngine(cfg, ecfg, params_for(cfg))
+
+
+def test_priority_preemption_token_identical():
+    """A high-priority arrival starves behind two full low-priority slots;
+    the SLO policy preempts one through the snapshot/restore path, and the
+    victim's resumed output is token-identical to an uncontended run."""
+    cfg = tiny()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=7) for _ in range(3)]
+
+    def submit_all(eng, vc):
+        eng.submit(Request(0, prompts[0], 20, priority=0, ttft_slo_s=2.0,
+                           tpot_slo_s=1.0))
+        eng.submit(Request(1, prompts[1], 20, priority=0, ttft_slo_s=2.0,
+                           tpot_slo_s=1.0))
+        for _ in range(3):
+            eng.tick()
+            vc.advance(0.01)
+        eng.submit(Request(2, prompts[2], 5, priority=2, ttft_slo_s=0.08))
+        _tick_until_done(eng, vc)
+        return {k: list(v) for k, v in eng.outputs.items()}
+
+    vc = VirtualClock()
+    eng = _mk_engine(cfg, vc, n_slots=2, policy="slo")
+    pressured = submit_all(eng, vc)
+    assert eng.batcher.stats.priority_preempted >= 1
+    assert eng.batcher.stats.completed == 3
+    # same three requests, ample slots, no preemption possible
+    vc2 = VirtualClock()
+    ample = submit_all(_mk_engine(cfg, vc2, n_slots=4, policy="fcfs"), vc2)
+    assert pressured == ample
+
+
+def test_deadline_abort_on_virtual_time_is_deterministic():
+    """Deadlines read the injected clock: the abort tick is a pure function
+    of tick_s, so two replays tear down with identical token counts."""
+    cfg = tiny()
+
+    def run():
+        vc = VirtualClock()
+        eng = _mk_engine(cfg, vc, n_slots=2, policy="fcfs")
+        eng.submit(Request(0, [3, 5, 7], 50, deadline_s=0.055))
+        _tick_until_done(eng, vc)
+        return eng.aborted.get(0), len(eng.outputs.get(0, ())), \
+            dict(eng.abort_counts)
+
+    a, b = run(), run()
+    assert a == b
+    assert a[0] == "deadline" and 0 < a[1] < 50
+
+
+def test_request_shim_equivalence():
+    """The deprecated positional submit still works, warns, and produces
+    the same tokens as the Request path."""
+    cfg = tiny()
+    vc = VirtualClock()
+    eng = _mk_engine(cfg, vc, n_slots=2, policy="fcfs")
+    with pytest.deprecated_call():
+        eng.submit(0, [3, 5, 7], 6)
+    _tick_until_done(eng, vc)
+    vc2 = VirtualClock()
+    eng2 = _mk_engine(cfg, vc2, n_slots=2, policy="fcfs")
+    eng2.submit(Request(0, [3, 5, 7], 6))
+    _tick_until_done(eng2, vc2)
+    assert {k: list(v) for k, v in eng.outputs.items()} == \
+        {k: list(v) for k, v in eng2.outputs.items()}

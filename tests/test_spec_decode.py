@@ -21,6 +21,7 @@ from repro.configs import get_config
 from repro.configs.base import reduced, validate_draft_pair
 from repro.models import model as MDL
 from repro.serving import DecodeEngine, EngineConfig
+from repro.serving import Request as Req
 
 BUDGETS = [3, 12, 5, 12, 2, 9]
 
@@ -70,7 +71,7 @@ def _run(mode="batched", *, draft=None, spec_horizon=3, n_pages=96,
     eng = DecodeEngine(cfg, ecfg, params=params, draft_params=dparams)
     for i, (p, b) in enumerate(zip(_prompts(nreq, shared),
                                    budgets or BUDGETS[:nreq])):
-        eng.submit(i, p, b)
+        eng.submit(Req(i, p, b))
     out = eng.run()
     return {k: list(v) for k, v in out.items()}, eng
 
@@ -331,7 +332,7 @@ def test_snapshot_async_drain():
 
     eng._drain_snapshots = spy.__get__(eng)
     for i, p in enumerate(_prompts(2)):
-        eng.submit(i, p, 12)
+        eng.submit(Req(i, p, 12))
     eng.run()
     assert eng.batcher.stats.preempted > 0
     assert eng.rstate_snapshots > 0

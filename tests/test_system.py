@@ -12,6 +12,7 @@ from repro.data.pipeline import TrainPipeline
 from repro.models import model as MDL
 from repro.training import optimizer as OPT
 from repro.training.train import make_train_step
+from repro.serving import Request as Req
 
 
 def tiny(name="llama3.2-1b", **kw):
@@ -26,8 +27,8 @@ def test_engine_continuous_batching_matches_reference():
     eng = DecodeEngine(cfg, ecfg, params)
     rng = np.random.default_rng(0)
     for r in range(5):
-        eng.submit(r, rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 9))),
-                   max_new_tokens=5)
+        eng.submit(Req(r, rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 9))),
+                   max_new_tokens=5))
     outs = eng.run(200)
     assert eng.batcher.stats.completed == 5
     assert eng.alloc.pages_in_use == 0            # all pages released (DPA)
@@ -50,7 +51,7 @@ def test_engine_slot_reuse_increases_throughput():
                         eos_token=-1)
     eng = DecodeEngine(cfg, ecfg)
     for r in range(6):
-        eng.submit(r, [3, 5, 7], max_new_tokens=3)
+        eng.submit(Req(r, [3, 5, 7], max_new_tokens=3))
     eng.run(300)
     assert eng.batcher.stats.completed == 6
     assert eng.batcher.stats.admitted == 6
@@ -65,7 +66,7 @@ def test_engine_handles_recurrent_and_encdec(arch):
                         eos_token=-1)
     eng = DecodeEngine(cfg, ecfg)
     for r in range(3):
-        eng.submit(r, [2, 4, 6, 8], max_new_tokens=3)
+        eng.submit(Req(r, [2, 4, 6, 8], max_new_tokens=3))
     outs = eng.run(200)
     assert eng.batcher.stats.completed == 3
     assert all(len(v) >= 3 for v in outs.values())

@@ -16,6 +16,7 @@ from repro.serving import DecodeEngine, EngineConfig
 from repro.telemetry import (NULL, TelemetryConfig, make_telemetry,
                              parse_exposition, percentile, validate_trace)
 from repro.telemetry.chrome_trace import ENGINE_PID, TRACKS
+from repro.serving import Request as Req
 
 PAGE = 4
 BUDGETS = [3, 12, 5, 12, 2, 9]
@@ -49,7 +50,7 @@ def _run(K=4, mode="batched", *, telemetry="on", n_pages=96, cache=False,
     rng = np.random.default_rng(3)
     for r in range(nreq):
         p = rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 20)))
-        eng.submit(r, p, budgets[r % len(budgets)])
+        eng.submit(Req(r, p, budgets[r % len(budgets)]))
     outs = eng.run(3000)
     return {k: list(v) for k, v in outs.items()}, eng
 
